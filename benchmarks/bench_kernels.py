@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas vs blocked-jnp vs oracle
+at reduced sizes (CPU wall-time is a correctness/overhead check, not a TPU
+projection)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels import jnp_blocked as JB
+from repro.kernels import ops, ref
+
+
+def run() -> List[str]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    B, Hq, Hkv, S, hd, D = 1, 8, 2, 512, 64, 256
+    q = jax.random.normal(ks[0], (B, Hq, S, hd)) * 0.3
+    x = jax.random.normal(ks[1], (B, S, D)) * 0.3
+    wk = jax.random.normal(ks[2], (D, Hkv, hd)) * (D ** -0.5)
+    wv = jax.random.normal(ks[3], (D, Hkv, hd)) * (D ** -0.5)
+    k = jnp.einsum("bsd,dhe->bhse", x, wk)
+    v = jnp.einsum("bsd,dhe->bhse", x, wv)
+
+    t = time_fn(jax.jit(lambda *a: ref.ref_attention(*a, causal=True)),
+                q, k, v) * 1e6
+    rows.append(csv_row("kernel_ref_attention", t, "materialized oracle"))
+    t = time_fn(jax.jit(lambda *a: JB.flash_attention_jnp(
+        *a, causal=True, block_k=128)), q, k, v) * 1e6
+    rows.append(csv_row("kernel_flash_jnp", t, "blocked lowerable path"))
+    t = time_fn(jax.jit(lambda *a: JB.stream_attention_jnp(
+        *a, causal=True, block_k=128)), q, x, wk, wv) * 1e6
+    rows.append(csv_row("kernel_stream_jnp", t, "fused KV-gen + attention"))
+    t = time_fn(jax.jit(lambda *a: ops.multi_head_attention(
+        *a, causal=True, use_pallas=True)), q, k, v) * 1e6
+    rows.append(csv_row("kernel_flash_pallas_interpret", t,
+                        "Pallas interpret mode (Python-emulated grid)"))
+
+    # SSD
+    Bs, Ss, H, P, N = 1, 512, 4, 32, 16
+    xs = jax.random.normal(ks[4], (Bs, Ss, H, P)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[5], (Bs, Ss, H)))
+    a = -jnp.exp(jax.random.normal(ks[0], (H,)) * 0.5)
+    b = jax.random.normal(ks[1], (Bs, Ss, N)) * 0.3
+    c = jax.random.normal(ks[2], (Bs, Ss, N)) * 0.3
+    t = time_fn(jax.jit(lambda *args: ref.ref_ssd(*args)),
+                xs, dt, a, b, c) * 1e6
+    rows.append(csv_row("kernel_ssd_sequential_ref", t, "per-step scan"))
+    t = time_fn(jax.jit(lambda *args: JB.ssd_chunked_jnp(
+        *args, chunk=128)[0]), xs, dt, a, b, c) * 1e6
+    rows.append(csv_row("kernel_ssd_chunked", t,
+                        "SSD chunked (tile-streaming analogue)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,35 @@
+"""Shared benchmark utilities + v5e napkin constants."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# v5e roofline constants (same as launch/dryrun.py)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# Energy napkin model (order-of-magnitude; replaces the paper's PrimeTime
+# numbers — DESIGN.md §7): HBM ~5.6 pJ/bit, on-chip ~2 pJ/byte, bf16 MAC.
+E_HBM_PER_BYTE = 45e-12
+E_VMEM_PER_BYTE = 2e-12
+E_PER_FLOP = 0.8e-12
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-seconds per call (CPU measurement)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

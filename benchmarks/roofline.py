@@ -1,0 +1,109 @@
+"""Roofline table builder (deliverable g): reads launch/dryrun.py artifacts
+and emits the per-(arch x shape x mesh) three-term roofline table for
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+ART_DIR = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+COLUMNS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "dcn_s", "bottleneck", "roofline_fraction", "useful_flop_ratio",
+           "mem_gib", "microbatches")
+
+
+def load_cells(art_dir: str = ART_DIR) -> List[Dict]:
+    cells = []
+    if not os.path.isdir(art_dir):
+        return cells
+    for fn in sorted(os.listdir(art_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(art_dir, fn)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def row_of(c: Dict) -> Optional[Dict]:
+    if c.get("status") != "ok":
+        return {"arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+                "status": c.get("status"),
+                "note": c.get("reason") or c.get("error", "")[:60]}
+    r = c["roofline"]
+    return {
+        "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+        "status": "ok",
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "dcn_s": r["dcn_s"],
+        "bottleneck": r["bottleneck"].replace("_s", ""),
+        "roofline_fraction": r["roofline_fraction"],
+        "useful_flop_ratio": c.get("useful_flop_ratio"),
+        "mem_gib": c["memory"]["total_bytes"] / 2 ** 30,
+        "microbatches": c.get("microbatches", 1),
+    }
+
+
+def table(art_dir: str = ART_DIR, mesh: Optional[str] = None) -> str:
+    rows = [row_of(c) for c in load_cells(art_dir)]
+    rows = [r for r in rows if r and (mesh is None or r["mesh"] == mesh)]
+    lines = [f"{'arch':20s} {'shape':12s} {'mesh':8s} {'comp(s)':>9s} "
+             f"{'mem(s)':>9s} {'coll(s)':>9s} {'dcn(s)':>9s} {'bound':>7s} "
+             f"{'RLfrac':>7s} {'useful':>7s} {'GiB/dev':>8s} {'mb':>3s}"]
+    for r in sorted(rows, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+                         f"-- {r['status']}: {r['note']}")
+            continue
+        lines.append(
+            f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s']:9.3g} {r['memory_s']:9.3g} "
+            f"{r['collective_s']:9.3g} {r['dcn_s']:9.3g} "
+            f"{r['bottleneck']:>7s} {r['roofline_fraction']:7.3f} "
+            f"{(r['useful_flop_ratio'] or 0):7.2f} {r['mem_gib']:8.2f} "
+            f"{r['microbatches']:3d}")
+    return "\n".join(lines)
+
+
+def run() -> List[str]:
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    errors = [c for c in cells if c.get("status") == "error"]
+    rows = [f"roofline_cells_ok,{len(ok)},baseline: skipped={len(skipped)} "
+            f"errors={len(errors)}"]
+    if ok:
+        worst = min(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+        best = max(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+        rows.append(f"roofline_worst,0.0,{worst['arch']}/{worst['shape']}"
+                    f"@{worst['mesh']} frac="
+                    f"{worst['roofline']['roofline_fraction']:.3f}")
+        rows.append(f"roofline_best,0.0,{best['arch']}/{best['shape']}"
+                    f"@{best['mesh']} frac="
+                    f"{best['roofline']['roofline_fraction']:.3f}")
+    # optimized (beyond-paper preset) sweep vs baseline
+    opt = [c for c in load_cells("artifacts/dryrun_opt")
+           if c.get("status") == "ok"]
+    if ok and opt:
+        base_map = {(c["arch"], c["shape"], c["mesh"]):
+                    c["roofline"]["step_time_est_s"] for c in ok}
+        geo, n = 1.0, 0
+        for c in opt:
+            k = (c["arch"], c["shape"], c["mesh"])
+            if k in base_map and c["roofline"]["step_time_est_s"] > 0:
+                geo *= base_map[k] / c["roofline"]["step_time_est_s"]
+                n += 1
+        if n:
+            best_o = max(opt,
+                         key=lambda c: c["roofline"]["roofline_fraction"])
+            rows.append(f"roofline_optimized_cells,{n},geomean step-est "
+                        f"speedup {geo ** (1 / n):.2f}x vs paper-faithful "
+                        f"baseline")
+            rows.append(f"roofline_optimized_best,0.0,"
+                        f"{best_o['arch']}/{best_o['shape']}@{best_o['mesh']}"
+                        f" frac={best_o['roofline']['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,37 @@
+"""Benchmark harness main — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (deliverable d)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_decode, bench_kernels, bench_pruning,
+                            bench_rewrite_overlap, bench_stream_modes,
+                            roofline)
+    sections = [
+        ("Fig6/Fig7 stream-mode comparison", bench_stream_modes.run),
+        ("Token pruning (paper SI claim)", bench_pruning.run),
+        ("TranCIM rewrite-latency analysis", bench_rewrite_overlap.run),
+        ("Decode regime (tile-stream latency win)", bench_decode.run),
+        ("Kernel micro-benchmarks", bench_kernels.run),
+        ("Roofline summary (from dry-run artifacts)", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            for row in fn():
+                print(row)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"# SECTION FAILED: {title}")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense LM for a few
+hundred steps with the full framework stack — sharded step function,
+deterministic data pipeline, async checkpointing, resume-on-restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--resume]
+
+On CPU this takes a few minutes; the identical code path drives the
+production mesh (launch/train.py).
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.core.types import Family, ModelConfig, ShapeConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.train import loop as L
+from repro.train import optimizer as OPT
+
+# ~100M params: 12L x d512 x ff2048, vocab 32k
+CFG = ModelConfig(
+    name="demo-100m", family=Family.DENSE,
+    num_layers=12, d_model=512, num_heads=8, num_kv_heads=4,
+    d_ff=2048, vocab_size=32000, head_dim=64,
+    act="silu", dtype="float32", param_dtype="float32",
+)
+# CPU-demo shape (~0.5k tokens/step so a few hundred steps finish in
+# minutes on one core); production shapes go through launch/train.py.
+SHAPE = ShapeConfig("demo", seq_len=128, global_batch=4, kind="train")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    print(f"model: {CFG.param_count()/1e6:.1f}M params; "
+          f"{SHAPE.global_batch}x{SHAPE.seq_len} tokens/step")
+    mesh = make_host_mesh()
+    src = SyntheticLM(CFG, SHAPE, seed=0)
+    tcfg = L.TrainConfig(
+        steps=args.steps, log_every=20, checkpoint_every=100,
+        checkpoint_dir=args.ckpt,
+        opt=OPT.OptimizerConfig(learning_rate=1e-3, warmup_steps=30,
+                                decay_steps=args.steps))
+
+    def on_log(m):
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.2f}  {m['steps_per_s']:.2f} it/s",
+              flush=True)
+
+    out = L.train(CFG, SHAPE, src, mesh, tcfg, hooks={"on_log": on_log})
+    first, last = out["metrics"][0], out["metrics"][-1]
+    print(f"\nloss {first['loss']:.3f} -> {last['loss']:.3f} "
+          f"over {args.steps} steps")
+    assert last["loss"] < first["loss"], "training did not reduce loss!"
+    print("checkpoints in", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

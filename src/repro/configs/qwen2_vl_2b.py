@@ -1,0 +1,20 @@
+"""Qwen2-VL-2B [arXiv:2409.12191; hf] — VLM backbone with M-RoPE
+(t/h/w sections 16/24/24 over head_dim/2 = 64).  Vision patch frontend is a
+stub: ``input_specs()`` provides embeddings + 3-axis position ids."""
+from repro.core.types import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family=Family.VLM,
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+    d_ff=8960, vocab_size=151936, head_dim=128,
+    mrope_sections=(16, 24, 24), rope_theta=1_000_000.0, act="silu",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2vl-smoke", family=Family.VLM,
+    num_layers=2, d_model=96, num_heads=4, num_kv_heads=2,
+    d_ff=192, vocab_size=512, head_dim=24,
+    mrope_sections=(4, 4, 4), act="silu",
+    tie_embeddings=True, dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,118 @@
+"""Architecture registry: ``--arch <id>`` resolution, model-module dispatch,
+and ``input_specs()`` (ShapeDtypeStruct stand-ins — no allocation) for every
+(arch × assigned-shape) cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (AttnKind, Family, ModelConfig, ShapeConfig,
+                              SHAPES)
+
+ARCHS: Dict[str, str] = {
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "h2o-danube3-4b": "repro.configs.h2o_danube3_4b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "whisper-base": "repro.configs.whisper_base",
+    # the paper's own models (extra beyond the assigned pool)
+    "vilbert-base": "repro.configs.vilbert_base",
+    "vilbert-large": "repro.configs.vilbert_large",
+}
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("vilbert")]
+
+# Sub-quadratic archs that run the long_500k cell (DESIGN.md §4); pure
+# full-attention archs skip it.
+LONG_CONTEXT_OK = {"mamba2-780m", "hymba-1.5b", "h2o-danube3-4b"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def model_module(cfg: ModelConfig):
+    if cfg.family == Family.ENCDEC:
+        from repro.models import encdec
+        return encdec
+    if cfg.family == Family.CROSSMODAL:
+        from repro.models import vilbert
+        return vilbert
+    from repro.models import transformer
+    return transformer
+
+
+def cell_supported(arch: str, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason string."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "full-attention arch: 0.5M dense KV out of scope (DESIGN §4)"
+    if cfg.family == Family.CROSSMODAL and "decode" in shape_name:
+        return "encoder-only: no decode step"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                per_pod_batch: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the *global* batch of one step.
+
+    For train/prefill: the token batch.  For decode: the new-token batch
+    (the KV cache is a separate spec — see ``cache_specs``).
+    """
+    B = per_pod_batch or shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.family == Family.ENCDEC:
+        specs = {"frames": sds((B, cfg.encoder_seq, cfg.d_model), dt),
+                 "tokens": sds((B, S), i32)}
+        if shape.kind == "train":
+            specs["labels"] = sds((B, S), i32)
+        return specs
+    if cfg.family == Family.CROSSMODAL:
+        specs = {"regions": sds((B, shape.seq_len, cfg.d_model), dt),
+                 "tokens": sds((B, shape.seq_len), i32)}
+        if shape.kind == "train":
+            specs["answers"] = sds((B,), i32)
+        return specs
+
+    specs = {"tokens": sds((B, S), i32)}
+    if shape.kind == "train":
+        specs["labels"] = sds((B, S), i32)
+    if cfg.family == Family.VLM and not shape.is_decode:
+        specs["positions"] = sds((3, B, S), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                per_pod_batch: Optional[int] = None) -> Any:
+    """ShapeDtypeStructs for the decode-time cache (eval_shape — no alloc)."""
+    B = per_pod_batch or shape.global_batch
+    mod = model_module(cfg)
+    if cfg.family == Family.ENCDEC:
+        enc = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        def mk():
+            cache = mod.init_cache(cfg, B, shape.seq_len,
+                                   jnp.zeros(enc.shape, enc.dtype))
+            cache["enc"] = jnp.zeros(enc.shape, enc.dtype)
+            return cache
+        return jax.eval_shape(mk)
+    return jax.eval_shape(lambda: mod.init_cache(cfg, B, shape.seq_len))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStructs for params via eval_shape (no allocation)."""
+    mod = model_module(cfg)
+    return jax.eval_shape(lambda: mod.init(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,94 @@
+"""DTPU — dynamic token pruning unit (paper §II-A, Evo-ViT/SpAtten style).
+
+Token importance = column mean of the attention probability matrix: how much
+total attention mass flows *into* each token.  The DTPU is its own block in
+the paper's Fig. 3(a) (separate from the CIM cores); here it is a standalone
+module that scores, ranks, and compacts token sets with JAX-static shapes
+(keep *counts* are static per layer; token *choice* is a runtime gather).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig, PruningConfig
+from repro.kernels import ref
+
+
+def attention_column_scores(q: jax.Array, k: jax.Array, *,
+                            causal: bool = False,
+                            sample_stride: int = 1) -> jax.Array:
+    """Column-mean of softmax(QK^T) over heads and (optionally strided)
+    queries.  q: (B,Hq,Sq,hd), k: (B,Hkv,Sk,hd) -> scores (B, Sk).
+
+    ``sample_stride > 1`` subsamples query rows — the DTPU's scoring pass is
+    O(Sq·Sk/stride) instead of O(Sq·Sk) with negligible rank distortion
+    (tests check rank stability).
+    """
+    if sample_stride > 1:
+        q = q[:, :, ::sample_stride]
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // max(Hkv, 1)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    s *= hd ** -0.5
+    if causal:
+        qi = jnp.arange(Sq)[:, None] * sample_stride
+        ki = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where((ki <= qi)[None, None, None], s, ref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p.mean(axis=(1, 2, 3))                       # (B, Sk)
+
+
+def select_tokens(scores: jax.Array, keep: int,
+                  *, keep_order: bool = True) -> jax.Array:
+    """Top-``keep`` token indices per batch row, ascending (order-preserving
+    compaction so RoPE/causality stay consistent).  scores: (B, S)."""
+    _, idx = jax.lax.top_k(scores, keep)                # (B, keep)
+    if keep_order:
+        idx = jnp.sort(idx, axis=-1)
+    return idx
+
+
+def gather_tokens(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """x: (B, S, D), idx: (B, keep) -> (B, keep, D)."""
+    return jnp.take_along_axis(x, idx[..., None], axis=1)
+
+
+def prune_stream(x: jax.Array, scores: jax.Array, keep: int,
+                 positions: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Compact one modality stream to its ``keep`` most-attended tokens.
+
+    Returns (x_kept, kept_idx, positions_kept).  ``positions`` (B, S) rides
+    along so position-aware archs keep original coordinates.
+    """
+    idx = select_tokens(scores, keep)
+    x_kept = gather_tokens(x, idx)
+    pos_kept = None
+    if positions is not None:
+        pos_kept = jnp.take_along_axis(positions, idx, axis=1)
+    return x_kept, idx, pos_kept
+
+
+def keep_plan(pruning: PruningConfig, num_layers: int,
+              seq_len: int) -> Tuple[int, ...]:
+    """Static per-layer kept-token counts (monotone non-increasing)."""
+    plan = []
+    prev = seq_len
+    for layer in range(num_layers):
+        n = pruning.kept_tokens(layer, num_layers, seq_len)
+        n = min(n, prev)
+        plan.append(n)
+        prev = n
+    return tuple(plan)
+
+
+def pruning_compute_savings(plan: Tuple[int, ...], seq_len: int) -> float:
+    """Fraction of attention FLOPs retained vs no pruning (quadratic term)."""
+    full = len(plan) * seq_len * seq_len
+    kept = sum(n * n for n in plan)
+    return kept / full

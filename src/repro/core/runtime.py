@@ -1,0 +1,28 @@
+"""Trace-time runtime flags (contextvar) — lets the dry-run/benchmarks flip
+lowering strategies (block-loop unrolling for cost-analysis probes, KV block
+sizes, activation-sharding hints) without threading args through every
+model signature.  Flags are read at *trace* time, so wrap ``.lower()`` /
+calls in ``with flags(...)``."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict
+
+_FLAGS: contextvars.ContextVar[Dict[str, Any]] = contextvars.ContextVar(
+    "repro_runtime_flags", default={})
+
+
+def get(name: str, default: Any = None) -> Any:
+    return _FLAGS.get().get(name, default)
+
+
+@contextlib.contextmanager
+def flags(**kwargs: Any):
+    cur = dict(_FLAGS.get())
+    cur.update(kwargs)
+    token = _FLAGS.set(cur)
+    try:
+        yield
+    finally:
+        _FLAGS.reset(token)

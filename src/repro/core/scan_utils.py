@@ -1,0 +1,30 @@
+"""scan-or-unroll helper.  XLA's cost analysis counts a while-loop body
+*once* regardless of trip count, so the dry-run's cost probes lower with
+``runtime.flags(unroll=True)`` to python-unroll every layer/block loop and
+make each FLOP visible (launch/dryrun.py corrects full-depth cells by linear
+extrapolation from shallow unrolled probes)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runtime
+
+
+def maybe_scan(body: Callable, init: Any, xs: Any) -> Tuple[Any, Any]:
+    """Drop-in for ``jax.lax.scan(body, init, xs)`` honoring the trace-time
+    ``unroll`` runtime flag.  Stacks per-step outputs like scan does."""
+    if not runtime.get("unroll", False):
+        return jax.lax.scan(body, init, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    outs = []
+    for i in range(length):
+        carry, out = body(carry, jax.tree.map(lambda a: a[i], xs))
+        outs.append(out)
+    if outs and outs[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *outs)
+    return carry, stacked

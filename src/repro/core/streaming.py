@@ -1,0 +1,81 @@
+"""StreamDCIM execution engine — mode selection + streaming encoder blocks.
+
+The TBR-CIM macro's *mode_config* bit (hybrid vs normal reconfiguration,
+paper §II-A) maps on TPU to an analytic dataflow decision per attention
+layer (DESIGN.md §2): fusing KV-generation into attention (TILE_STREAM)
+reduces HBM traffic iff streaming the raw activations ``x_kv`` (width D)
+beats streaming materialized K/V (width 2·Hkv·hd):
+
+    per-q-block streamed bytes:   TILE_STREAM  = S·D
+                                  LAYER_STREAM = S·2·Hkv·hd   (+ one-time
+                                                 2·S·Hkv·hd write for K/V)
+
+For MHA models (the paper's ViLBERT targets: Hkv·hd = D) tile-streaming
+strictly wins — it halves streamed bytes AND removes the K/V round-trip,
+which is exactly the paper's claim.  For aggressively-GQA LMs
+(2·Hkv·hd << D) generation-fusion is traffic-negative, so the engine falls
+back to LAYER_STREAM — the normal-mode/weight-stationary path.  This
+arch-adaptive reconfiguration is the paper's microarchitectural flexibility
+reborn as a compiler-visible dataflow choice.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.types import AttnKind, ExecutionMode, ModelConfig
+
+
+def tile_stream_profitable(d_model: int, num_kv_heads: int,
+                           head_dim: int) -> bool:
+    """True iff fused KV-generation reduces streamed HBM bytes."""
+    return 2 * num_kv_heads * head_dim >= d_model
+
+
+def choose_mode(cfg: ModelConfig, *, d_model: Optional[int] = None,
+                num_kv_heads: Optional[int] = None,
+                head_dim: Optional[int] = None) -> ExecutionMode:
+    """Resolve the execution mode for one attention layer.
+
+    Honors an explicit cfg.execution_mode of NON_STREAM / LAYER_STREAM
+    (benchmark baselines); for TILE_STREAM, applies the profitability rule
+    unless cfg.fuse_kv_generation forces fusion on.
+    """
+    mode = cfg.execution_mode
+    if mode != ExecutionMode.TILE_STREAM:
+        return mode
+    if cfg.attn_kind == AttnKind.MLA:
+        return ExecutionMode.TILE_STREAM   # latent decompress: always fuse
+    d = d_model or cfg.d_model
+    hkv = num_kv_heads or cfg.num_kv_heads
+    hd = head_dim or cfg.head_dim
+    if cfg.fuse_kv_generation and tile_stream_profitable(d, hkv, hd):
+        return ExecutionMode.TILE_STREAM
+    return ExecutionMode.LAYER_STREAM
+
+
+def streamed_bytes_per_layer(seq_q: int, seq_kv: int, d_model: int,
+                             num_heads: int, num_kv_heads: int, head_dim: int,
+                             mode: ExecutionMode, *, block_q: int = 256,
+                             bytes_per_el: int = 2) -> int:
+    """Analytic HBM-traffic model for one attention layer (used by the
+    benchmark harness to project TPU speedups from CPU-measured numerics —
+    DESIGN.md §6).  Counts Q/K/V/O/x_kv movement; weight traffic is
+    identical across modes and omitted."""
+    nqb = max(seq_q // block_q, 1)
+    q_bytes = seq_q * num_heads * head_dim * bytes_per_el
+    o_bytes = q_bytes
+    kv_width = 2 * num_kv_heads * head_dim
+    if mode == ExecutionMode.NON_STREAM:
+        # Q,K,V written+read; scores A (H·Sq·Skv) written+read; P written+
+        # read; out written.  (The paper's off-chip round-trip baseline.)
+        a_bytes = num_heads * seq_q * seq_kv * bytes_per_el
+        kv_bytes = seq_kv * kv_width * bytes_per_el
+        return (2 * q_bytes + 2 * kv_bytes + 4 * a_bytes + 2 * o_bytes
+                + seq_kv * d_model * bytes_per_el)
+    if mode == ExecutionMode.LAYER_STREAM:
+        # x_kv read once + K/V written once, then re-read per q block.
+        kv_bytes = seq_kv * kv_width * bytes_per_el
+        return (q_bytes + o_bytes + seq_kv * d_model * bytes_per_el
+                + kv_bytes + nqb * kv_bytes)
+    # TILE_STREAM: x_kv re-read per q block; K/V never touch HBM.
+    return (q_bytes + o_bytes + nqb * seq_kv * d_model * bytes_per_el)

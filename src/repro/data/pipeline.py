@@ -1,0 +1,148 @@
+"""Deterministic, resumable data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` — restart-from-checkpoint
+resumes the stream exactly (no data loss or duplication, the fault-tolerance
+contract in DESIGN.md §5).  Sources:
+
+* ``SyntheticLM`` — Zipf-distributed token stream (shape-faithful stand-in;
+  offline container has no corpus downloads)
+* ``TextCorpus``  — byte-level tokenization of local files, packed into
+  fixed-length sequences (the end-to-end example trains on this)
+* multimodal variants emit the stub frontend tensors (frames / regions)
+
+``ShardedLoader`` wraps a source with host-sharding (each host materializes
+only its slice of the global batch) and a double-buffered prefetch thread.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.core.types import Family, ModelConfig, ShapeConfig
+
+
+class SyntheticLM:
+    """Zipf token stream: batch(step) is deterministic in (seed, step)."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                 zipf_a: float = 1.2):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.zipf_a = zipf_a
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        B, S = self.shape.global_batch, self.shape.seq_len
+        V = self.cfg.vocab_size
+        toks = rng.zipf(self.zipf_a, size=(B, S + 1)).astype(np.int64)
+        toks = (toks - 1) % V
+        out = {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}
+        if self.cfg.family == Family.VLM:
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, None],
+                                  (3, B, S))
+            out["positions"] = np.ascontiguousarray(pos)
+        if self.cfg.family == Family.ENCDEC:
+            out["frames"] = rng.standard_normal(
+                (B, self.cfg.encoder_seq, self.cfg.d_model)).astype(
+                    np.float32) * 0.1
+        if self.cfg.family == Family.CROSSMODAL:
+            out = {"regions": rng.standard_normal(
+                       (B, S, self.cfg.d_model)).astype(np.float32) * 0.1,
+                   "tokens": out["tokens"],
+                   "answers": rng.integers(0, 3129, size=(B,)).astype(
+                       np.int32)}
+        return out
+
+
+class TextCorpus:
+    """Byte-tokenized local files packed to fixed-length rows.
+
+    The whole corpus is memory-mapped once; batch(step) slices
+    deterministically with a per-step shuffle so restart is exact.
+    """
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, path: str,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        blobs = []
+        if os.path.isdir(path):
+            for name in sorted(os.listdir(path)):
+                p = os.path.join(path, name)
+                if os.path.isfile(p):
+                    with open(p, "rb") as f:
+                        blobs.append(np.frombuffer(f.read(), np.uint8))
+        else:
+            with open(path, "rb") as f:
+                blobs.append(np.frombuffer(f.read(), np.uint8))
+        data = np.concatenate(blobs) if blobs else np.zeros((1,), np.uint8)
+        S = shape.seq_len
+        n_rows = max(len(data) // (S + 1), 1)
+        reps = -(-n_rows * (S + 1) // len(data))
+        data = np.tile(data, max(reps, 1))[:n_rows * (S + 1)]
+        self.rows = data.reshape(n_rows, S + 1).astype(np.int32) % \
+            cfg.vocab_size
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        idx = rng.integers(0, len(self.rows), size=(self.shape.global_batch,))
+        rows = self.rows[idx]
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+class ShardedLoader:
+    """Host-sharded, prefetching iterator over a deterministic source."""
+
+    def __init__(self, source, *, start_step: int = 0, prefetch: int = 2,
+                 host_count: Optional[int] = None,
+                 host_id: Optional[int] = None):
+        self.source = source
+        self.host_count = host_count or jax.process_count()
+        self.host_id = host_id if host_id is not None else jax.process_index()
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _shard(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        out = {}
+        for k, v in batch.items():
+            if k == "positions":           # (3, B, S) — shard dim 1
+                b = v.shape[1] // self.host_count
+                out[k] = v[:, self.host_id * b:(self.host_id + 1) * b]
+            else:
+                b = v.shape[0] // self.host_count
+                out[k] = v[self.host_id * b:(self.host_id + 1) * b]
+        return out
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self._shard(self.source.batch(step))
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step + 1
+        return batch
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,38 @@
+"""Activation-sharding hints — the §Perf hillclimbing lever.
+
+Model code calls ``constrain(x, key)`` at strategic points; by default this
+is a no-op (XLA sharding propagation decides).  The dry-run / launcher
+installs a hint table via ``runtime.flags(sharding_hints={key: Named
+Sharding | PartitionSpec})`` to pin activation shardings where propagation
+goes wrong:
+
+* ``embed_out``  — the token-embedding gather output (B, S, D).  With a
+  vocab-sharded table, XLA propagates the table sharding into the gather
+  and then 'involuntarily fully rematerializes' (its own warning) — pinning
+  batch-sharding here removes an all-gather of the whole activation.
+* ``attn_q`` / ``attn_out`` — (B, H, S, hd) attention activations.  For
+  archs whose head count does not divide the model axis (starcoder2 36H,
+  minitron 24H, qwen2-vl 12H, hymba 25H, whisper 8H) the attention weights
+  replicate, and without a hint the whole attention computation replicates
+  16x across 'model'.  Pinning the *query sequence* over 'model' makes
+  attention context-parallel: each model shard computes Sq/16 query rows
+  against the (small, GQA-compressed) full K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.core import runtime
+
+
+def constrain(x: jax.Array, key: str) -> jax.Array:
+    hints = runtime.get("sharding_hints")
+    if not hints or key not in hints:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, hints[key])
+    except (ValueError, TypeError):
+        # shape not divisible by the hinted axis -> leave unconstrained
+        return x

@@ -1,0 +1,270 @@
+"""Logical-axis sharding rules (t5x/MaxText style), adapted per architecture.
+
+Production mesh axes: ``("data", "model")`` single-pod, ``("pod", "data",
+"model")`` multi-pod (launch/mesh.py).  Batch shards over (pod, data);
+parameters shard over 'model' by these rules:
+
+* embedding / unembed       -> vocab over 'model' (all vocabs padded /128)
+* MLP w_up/w_gate           -> d_ff over 'model' (col-parallel); w_down
+                               row-parallel ('model' on d_ff input dim)
+* attention q/k/v/o         -> heads over 'model' IF num_heads % axis == 0
+                               (Megatron); otherwise weights stay replicated
+                               and attention runs *context-parallel* (query
+                               seq over 'model' via activation hints —
+                               non-divisible-head archs: starcoder2 36H,
+                               minitron 24H, qwen2-vl 12H, hymba 25H,
+                               whisper 8H)
+* MoE experts               -> expert dim over 'model' if E % axis == 0
+                               (EP: deepseek 256e), else per-expert d_ff
+                               over 'model' (expert-TP: grok 8e)
+* MLA latent projections    -> low-rank dims replicated, per-head dims over
+                               'model' (128 heads % 16 == 0)
+* FSDP: for models >= fsdp_threshold params, every replicated-weight dim
+  of size % |data| == 0 additionally shards its largest dim over 'data'
+  (ZeRO-3 semantics; XLA all-gathers at use)
+
+Optimizer state inherits the param sharding (ZeRO-1 comes free: adam m/v
+shard exactly like their param).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.types import AttnKind, Family, ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def heads_shardable(cfg: ModelConfig, mesh: Mesh) -> bool:
+    m = _axis_size(mesh, "model")
+    return cfg.num_heads % m == 0 if cfg.num_heads else False
+
+
+def kv_heads_shardable(cfg: ModelConfig, mesh: Mesh) -> bool:
+    m = _axis_size(mesh, "model")
+    return cfg.num_kv_heads % m == 0 if cfg.num_kv_heads else False
+
+
+def experts_shardable(cfg: ModelConfig, mesh: Mesh) -> bool:
+    m = _axis_size(mesh, "model")
+    return cfg.num_experts % m == 0 if cfg.num_experts else False
+
+
+def _fsdp_wrap(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh,
+               use_fsdp: bool) -> Tuple:
+    """Add 'data' sharding on the largest unsharded, divisible dim."""
+    if not use_fsdp:
+        return spec
+    d = _axis_size(mesh, "data")
+    best, best_size = None, 0
+    for i, (s, ax) in enumerate(zip(shape, spec)):
+        if ax is None and s % d == 0 and s > best_size:
+            best, best_size = i, s
+    if best is None:
+        return spec
+    out = list(spec)
+    out[best] = "data"
+    return tuple(out)
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                   mesh: Mesh, use_fsdp: bool) -> P:
+    """Rule table keyed on the param-tree path (slash-joined keys)."""
+    m_ok = _axis_size(mesh, "model") > 1
+    heads_ok = heads_shardable(cfg, mesh)
+    kv_ok = kv_heads_shardable(cfg, mesh)
+    ep_ok = experts_shardable(cfg, mesh)
+    nd = len(shape)
+
+    def fs(spec):
+        spec = tuple(spec) + (None,) * (nd - len(spec))
+        return P(*_fsdp_wrap(spec, shape, mesh, use_fsdp))
+
+    leaf = path.split("/")[-1]
+
+    if not m_ok:
+        return fs((None,) * nd)
+
+    # --- embeddings ---
+    if leaf == "embedding":
+        return fs(("model", None))
+    if leaf == "unembed":
+        return fs((None, "model"))
+    if leaf in ("text_pos", "dec_pos"):
+        return fs((None, None))
+
+    # --- MoE expert weights (E, D, F) / (E, F, D); router (D, E) ---
+    if "moe" in path or (cfg.family == Family.MOE and leaf in
+                         ("w_gate", "w_up", "w_down") and nd == 3):
+        if nd == 3:
+            if ep_ok:
+                return fs(("model", None, None))
+            # expert-TP (E ∤ |model|, e.g. grok 8e): shard the hidden dim
+            # over 'model'; FSDP supplies the 'data' factor.  (A 2-axis
+            # hidden sharding was hypothesized to remove the FSDP weight
+            # gathers but measured 2.7x MORE collective traffic — XLA
+            # reshards the dispatch activations to match; EXPERIMENTS
+            # §Perf cell D, refuted.)
+            if leaf == "w_down":
+                return fs((None, "model", None))
+            return fs((None, None, "model"))
+        if leaf == "router":
+            return fs((None, None))
+
+    # --- MLA ---
+    if cfg.attn_kind == AttnKind.MLA and nd >= 2:
+        if leaf in ("wq_b", "wk_b", "wv_b") and nd == 3:
+            return fs((None, "model", None))       # per-head dim (128 % 16)
+        if leaf == "wo" and nd == 3:
+            return fs(("model", None, None))
+        if leaf in ("wq_a", "wkv_a"):
+            return fs((None, None))
+
+    # --- dense attention (D, H, hd) / (H, hd, D) ---
+    if leaf == "wq" and nd == 3:
+        return fs((None, "model", None)) if heads_ok else fs((None,) * 3)
+    if leaf in ("wk", "wv") and nd == 3:
+        return fs((None, "model", None)) if kv_ok else fs((None,) * 3)
+    if leaf == "wo" and nd == 3:
+        return fs(("model", None, None)) if heads_ok else fs((None,) * 3)
+
+    # --- MLP (D, F) col / (F, D) row ---
+    if leaf in ("w_gate", "w_up") and nd == 2:
+        return fs((None, "model"))
+    if leaf == "w_down" and nd == 2:
+        return fs(("model", None))
+
+    # --- SSM ---
+    if leaf == "in_proj":     # (D, 2*d_inner + 2N + H) — shard fused out dim
+        return fs((None, "model")) if shape[1] % _axis_size(mesh, "model") == 0 \
+            else fs((None, None))
+    if leaf == "out_proj":
+        return fs(("model", None)) if shape[0] % _axis_size(mesh, "model") == 0 \
+            else fs((None, None))
+
+    # norms / scalars / small tables: replicated
+    return fs((None,) * nd)
+
+
+def _flatten_with_paths(tree) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    def pstr(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+    return [(pstr(kp), leaf) for kp, leaf in flat], treedef
+
+
+def param_shardings(param_tree, cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp_threshold: float = 8e9):
+    """param_tree: pytree of arrays or ShapeDtypeStructs -> NamedShardings.
+
+    Layer-stacked params (leading L dim from vmap-init) get the rule applied
+    to the trailing dims with the stack dim replicated.
+    """
+    use_fsdp = cfg.param_count() >= fsdp_threshold and _axis_size(mesh, "data") > 1
+    flat, treedef = _flatten_with_paths(param_tree)
+    stacked_prefixes = ("layers", "dense_layers", "enc_layers", "dec_layers",
+                        "text_pre", "co_x", "co_y")
+
+    specs = []
+    for path, leaf in flat:
+        shape = tuple(leaf.shape)
+        top = path.split("/")[0]
+        if top in stacked_prefixes and len(shape) >= 1:
+            inner = spec_for_param(path, shape[1:], cfg, mesh, use_fsdp)
+            spec = P(*((None,) + tuple(inner)))
+        else:
+            spec = spec_for_param(path, shape, cfg, mesh, use_fsdp)
+        specs.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    return P(tuple(axes)) if axes else P()
+
+
+def batch_shardings(batch_tree, mesh: Mesh, *, seq_sharded: bool = False):
+    """Token batches shard dim0 (batch) over (pod, data).  For batch-1
+    long-context cells, ``seq_sharded`` shards dim1 (sequence) instead (SP).
+    positions (3, B, S) shard dim1."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] == 3 and nd == 3:          # vlm positions
+            return NamedSharding(mesh, P(None, baxes, None))
+        if seq_sharded and nd >= 2:
+            return NamedSharding(mesh, P(None, baxes) + (None,) * (nd - 2))
+        return NamedSharding(mesh, P(baxes) + (None,) * (nd - 1))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_shardings(cache_tree, cfg: ModelConfig, mesh: Mesh, *,
+                    seq_sharded: bool = False):
+    """KV caches: batch over (pod,data); heads over 'model' when divisible;
+    otherwise cache *sequence* over 'model' (context-parallel decode).
+    Layer-stacked: leading L dim replicated.
+    SSM states: heads over 'model' when divisible."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in baxes:
+        dp *= _axis_size(mesh, a)
+    m = _axis_size(mesh, "model")
+    kv_ok = kv_heads_shardable(cfg, mesh)
+    flat, treedef = _flatten_with_paths(cache_tree)
+    out = []
+    for path, leaf in flat:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        leafname = path.split("/")[-1]
+        if leafname == "len" or nd == 0:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        # strip the layer-stack dim
+        core = shape[1:]
+        batch = () if seq_sharded else baxes   # batch=1 cells replicate B
+        if leafname in ("k", "v"):
+            # (L, B, Hkv, S, hd) — SP: cache sequence over 'data' when the
+            # batch axis is degenerate (long-context decode).
+            sq = baxes if (seq_sharded and core[2] % dp == 0) else None
+            if kv_ok:
+                spec = P(None, batch, "model", sq, None)
+            elif core[2] % m == 0 and not seq_sharded:
+                spec = P(None, batch, None, "model", None)
+            elif seq_sharded and core[2] % (dp * m) == 0:
+                spec = P(None, batch, None, baxes + ("model",), None)
+            else:
+                spec = P(None, batch, None, sq, None)
+        elif leafname in ("c", "k_rope"):      # MLA latent (L, B, S, kvr)
+            sq = baxes if (seq_sharded and core[1] % dp == 0) else (
+                "model" if core[1] % m == 0 and not seq_sharded else None)
+            spec = P(None, batch, sq, None)
+        elif leafname == "state":     # SSD (L, B, H, P, N)
+            spec = P(None, batch, "model" if core[1] % m == 0 else None,
+                     None, None)
+        elif leafname == "conv":      # (L, B, K-1, C)
+            spec = P(None, batch, None,
+                     "model" if core[2] % m == 0 else None)
+        elif leafname == "enc":       # (B, S_enc, D) — not layer-stacked
+            spec = P(batch, None, None)
+        else:
+            spec = P(*((None,) * nd))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

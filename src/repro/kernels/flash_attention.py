@@ -1,0 +1,121 @@
+"""Flash attention Pallas-TPU kernel — the LAYER_STREAM baseline.
+
+This models TranCIM-style layer-based streaming: K and V have already been
+materialized to HBM by the projection layer ("CIM rewriting" completed for
+the whole layer), and attention streams KV tiles through VMEM.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv innermost; the online
+softmax state lives in VMEM scratch that persists across kv grid steps.
+GQA is handled in the K/V BlockSpec index map (q head -> kv head).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128  # TPU vector lane width; running-max/denominator are lane-replicated
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, q_offset: int,
+                  bq: int, bk: int, kv_len: int, num_kv_blocks: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    i = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)                    # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = (i * bq + q_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len                                   # seq-pad mask
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                    # (bq, LANES)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)             # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    p = jnp.exp(s - m_new[:, :1])                          # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                        # (bq, LANES)
+    l_new = l_prev * alpha + jnp.broadcast_to(
+        jnp.sum(p, axis=-1, keepdims=True), l_prev.shape)
+    acc = acc_scr[...] * alpha[:, :1] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finish():
+        l_final = l_scr[:, :1]
+        l_safe = jnp.where(l_final == 0.0, 1.0, l_final)   # fully-masked rows
+        o_ref[0, 0, :, :] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, window: int = 0, q_offset: int = 0,
+                    scale: Optional[float] = None,
+                    kv_len: Optional[int] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) -> (B, Hq, Sq, hd).
+
+    Shapes must be pre-padded: Sq % block_q == 0, hd % 128 == 0 (see
+    ``ops.multi_head_attention`` for the padding wrapper).  ``kv_len`` is
+    the true (unpadded) key count — padded keys are masked out.
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    hdv = v.shape[3]            # may differ from hd (MLA: MQA over the
+                                # latent — qk width kvr+rope, v width kvr)
+    kv_len = Sk if kv_len is None else kv_len
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nqb = pl.cdiv(Sq, bq)
+    nkb = pl.cdiv(Sk, bk)
+    if scale is None:
+        scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, kv_len=kv_len, num_kv_blocks=nkb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hdv), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hdv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hdv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, hdv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,352 @@
+"""Memory-efficient flash-attention backward (custom VJP).
+
+``lax.scan``-based online-softmax saves per-block residuals (the (Sq, bk)
+probability tiles) for backward — O(Sq·Sk) memory, defeating the point of
+flash attention under ``jax.grad``.  This module implements the standard
+two-pass flash backward: forward saves only (out, L = m + log l); backward
+re-generates each K/V tile, recomputes the probability tile from L, and
+accumulates dQ / dK / dV — O(Sq·bk) live memory.
+
+For the TILE_STREAM path the backward *also* re-generates K/V from x_kv via
+``jax.vjp`` of the tile generator, producing dx_kv / dW_K / dW_V / dγ in the
+same block loop — the cross-forwarding dataflow applies to the backward pass
+too (a beyond-paper extension; the paper only treats inference/forward).
+
+The custom_vjp functions are module-level with static config passed through
+``nondiff_argnums`` (per-call closures leak tracers under checkpoint+scan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class _Cfg(NamedTuple):
+    causal: bool
+    window: int
+    q_offset: int
+    block_k: int
+    unroll: bool
+    kv_len: int          # true (pre-pad) K length for masking
+    use_rope: bool = False
+    use_norm: bool = False
+    norm_eps: float = 1e-6
+
+
+def _mask_for(qpos, kpos, kv_len, causal, window):
+    mask = kpos[None, :] < kv_len
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    return mask
+
+
+def _scan_or_unroll(body, init, xs, nkb, unroll, stack_out=False):
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    carry, outs = init, []
+    for i in range(nkb):
+        carry, o = body(carry, jax.tree.map(lambda a: a[i], xs))
+        if stack_out:
+            outs.append(o)
+    return carry, outs
+
+
+# ---------------------------------------------------------------------------
+# Plain flash attention (LAYER_STREAM)
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_pass(q, k, v, cfg: _Cfg):
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skp = k.shape[1], k.shape[2]          # already padded
+    hdv = v.shape[3]                           # V width may differ (MLA)
+    G = Hq // Hkv
+    bk = cfg.block_k
+    nkb = Skp // bk
+    scale = hd ** -0.5
+    qpos = jnp.arange(Sq) + cfg.q_offset
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd) * scale
+    kb = jnp.moveaxis(k.reshape(B, Hkv, nkb, bk, hd), 2, 0).astype(jnp.float32)
+    vb = jnp.moveaxis(v.reshape(B, Hkv, nkb, bk, hdv), 2, 0).astype(jnp.float32)
+
+    def blk(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        s = jnp.where(_mask_for(qpos, kpos, cfg.kv_len, cfg.causal,
+                                cfg.window)[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hdv), jnp.float32)
+    (m, l, acc), _ = _scan_or_unroll(blk, (m0, l0, a0),
+                                     (jnp.arange(nkb), kb, vb), nkb,
+                                     cfg.unroll)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, Sq, hdv).astype(q.dtype)
+    return out, m + jnp.log(l_safe)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, cfg: _Cfg):
+    out, _ = _flash_fwd_pass(q, k, v, cfg)
+    return out
+
+
+def _flash_fwd(q, k, v, cfg: _Cfg):
+    out, lse = _flash_fwd_pass(q, k, v, cfg)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(cfg: _Cfg, res, dout):
+    q, k, v, out, lse = res
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skp = k.shape[1], k.shape[2]
+    hdv = v.shape[3]
+    G = Hq // Hkv
+    bk = cfg.block_k
+    nkb = Skp // bk
+    scale = hd ** -0.5
+    qpos = jnp.arange(Sq) + cfg.q_offset
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    dof = dout.astype(jnp.float32).reshape(B, Hkv, G, Sq, hdv)
+    of = out.astype(jnp.float32).reshape(B, Hkv, G, Sq, hdv)
+    delta = jnp.sum(dof * of, axis=-1)
+    kb = jnp.moveaxis(k.reshape(B, Hkv, nkb, bk, hd), 2, 0).astype(jnp.float32)
+    vb = jnp.moveaxis(v.reshape(B, Hkv, nkb, bk, hdv), 2, 0).astype(jnp.float32)
+
+    def blk(dq_acc, inp):
+        j, k_j, v_j = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf * scale, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        s = jnp.where(_mask_for(qpos, kpos, cfg.kv_len, cfg.causal,
+                                cfg.window)[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, dof)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dof, v_j)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_j)
+        dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    dq, kvs = _scan_or_unroll(blk, dq0, (jnp.arange(nkb), kb, vb), nkb,
+                              cfg.unroll, stack_out=True)
+    if cfg.unroll:
+        dk = jnp.stack([a for a, _ in kvs], 0)
+        dv = jnp.stack([b for _, b in kvs], 0)
+    else:
+        dk, dv = kvs
+    dk = jnp.moveaxis(dk, 0, 2).reshape(B, Hkv, Skp, hd)
+    dv = jnp.moveaxis(dv, 0, 2).reshape(B, Hkv, Skp, hdv)
+    return (dq.reshape(B, Hq, Sq, hd).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_mem_efficient(q, k, v, *, causal=False, window=0, q_offset=0,
+                        block_k=512, unroll=False, q_chunk=8192):
+    """GQA flash attention with O(Sq + bk) backward residuals.
+
+    Long query sides are processed in static-offset chunks so the per-block
+    probability tile stays O(q_chunk · block_k) — required for MLA prefill
+    where 128 query heads share one latent KV (B·H·Sq·bk would otherwise
+    reach tens of GiB at 32k).
+    """
+    Sk = k.shape[2]
+    bk = min(block_k, Sk)
+    nkb = -(-Sk // bk)
+    pad = nkb * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sq = q.shape[2]
+    if Sq > q_chunk and Sq % q_chunk == 0:
+        outs = []
+        for i in range(Sq // q_chunk):
+            cfg = _Cfg(causal=causal, window=window,
+                       q_offset=q_offset + i * q_chunk, block_k=bk,
+                       unroll=unroll, kv_len=Sk)
+            outs.append(_flash(q[:, :, i * q_chunk:(i + 1) * q_chunk],
+                               k, v, cfg))
+        return jnp.concatenate(outs, axis=2)
+    cfg = _Cfg(causal=causal, window=window, q_offset=q_offset, block_k=bk,
+               unroll=unroll, kv_len=Sk)
+    return _flash(q, k, v, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Fused KV-generation + attention (TILE_STREAM)
+# ---------------------------------------------------------------------------
+
+def _gen_tile(x_j, wk_, wv_, gamma, sin_j, cos_j, cfg: _Cfg, hd: int):
+    """x_j (B,bk,D) -> k_j, v_j (B,Hkv,bk,hd), f32."""
+    k_j = jnp.einsum("btd,dhe->bthe", x_j.astype(jnp.float32),
+                     wk_.astype(jnp.float32))
+    v_j = jnp.einsum("btd,dhe->bthe", x_j.astype(jnp.float32),
+                     wv_.astype(jnp.float32))
+    if cfg.use_norm:
+        var = jnp.mean(k_j * k_j, axis=-1, keepdims=True)
+        k_j = k_j * jax.lax.rsqrt(var + cfg.norm_eps) \
+            * gamma.astype(jnp.float32)[None, None, None]
+    if cfg.use_rope:
+        half = hd // 2
+        k1, k2 = k_j[..., :half], k_j[..., half:]
+        s_ = sin_j[None, :, None].astype(jnp.float32)
+        c_ = cos_j[None, :, None].astype(jnp.float32)
+        k_j = jnp.concatenate([k1 * c_ - k2 * s_, k2 * c_ + k1 * s_], -1)
+    return (jnp.moveaxis(k_j, 2, 1), jnp.moveaxis(v_j, 2, 1))
+
+
+def _stream_fwd_pass(q, xkv, wk_, wv_, gamma, sin, cos, cfg: _Cfg):
+    B, Hq, Sq, hd = q.shape
+    Skp, D = xkv.shape[1], xkv.shape[2]
+    Hkv = wk_.shape[1]
+    G = Hq // Hkv
+    bk = cfg.block_k
+    nkb = Skp // bk
+    scale = hd ** -0.5
+    qpos = jnp.arange(Sq) + cfg.q_offset
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd) * scale
+    xb = jnp.moveaxis(xkv.reshape(B, nkb, bk, D), 1, 0)
+    sinb = sin.reshape(nkb, bk, hd // 2)
+    cosb = cos.reshape(nkb, bk, hd // 2)
+
+    def blk(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, x_j, sin_j, cos_j = inp
+        k_j, v_j = _gen_tile(x_j, wk_, wv_, gamma, sin_j, cos_j, cfg, hd)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        s = jnp.where(_mask_for(qpos, kpos, cfg.kv_len, cfg.causal,
+                                cfg.window)[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = _scan_or_unroll(
+        blk, (m0, l0, a0), (jnp.arange(nkb), xb, sinb, cosb), nkb,
+        cfg.unroll)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, Sq, hd).astype(q.dtype)
+    return out, m + jnp.log(l_safe)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def _stream(q, xkv, wk, wv, gamma, sin, cos, cfg: _Cfg):
+    out, _ = _stream_fwd_pass(q, xkv, wk, wv, gamma, sin, cos, cfg)
+    return out
+
+
+def _stream_fwd(q, xkv, wk, wv, gamma, sin, cos, cfg: _Cfg):
+    out, lse = _stream_fwd_pass(q, xkv, wk, wv, gamma, sin, cos, cfg)
+    return out, (q, xkv, wk, wv, gamma, sin, cos, out, lse)
+
+
+def _stream_bwd(cfg: _Cfg, res, dout):
+    q, xkv, wk_, wv_, gamma, sin, cos, out, lse = res
+    B, Hq, Sq, hd = q.shape
+    Skp, D = xkv.shape[1], xkv.shape[2]
+    Hkv = wk_.shape[1]
+    G = Hq // Hkv
+    bk = cfg.block_k
+    nkb = Skp // bk
+    scale = hd ** -0.5
+    qpos = jnp.arange(Sq) + cfg.q_offset
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    dof = dout.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    of = out.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    delta = jnp.sum(dof * of, axis=-1)
+    xb = jnp.moveaxis(xkv.reshape(B, nkb, bk, D), 1, 0)
+    sinb = sin.reshape(nkb, bk, hd // 2)
+    cosb = cos.reshape(nkb, bk, hd // 2)
+
+    def blk(carry, inp):
+        dq_acc, dwk_acc, dwv_acc, dg_acc = carry
+        j, x_j, sin_j, cos_j = inp
+        (k_j, v_j), vjp_fn = jax.vjp(
+            lambda xx, wkk, wvv, gg: _gen_tile(xx, wkk, wvv, gg, sin_j,
+                                               cos_j, cfg, hd),
+            x_j, wk_, wv_, gamma)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf * scale, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        s = jnp.where(_mask_for(qpos, kpos, cfg.kv_len, cfg.causal,
+                                cfg.window)[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, dof)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dof, v_j)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_j)
+        dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+        dx_j, dwk_j, dwv_j, dg_j = vjp_fn((dk_j, dv_j))
+        return ((dq_acc, dwk_acc + dwk_j, dwv_acc + dwv_j, dg_acc + dg_j),
+                dx_j)
+
+    init = (jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32),
+            jnp.zeros(wk_.shape, jnp.float32),
+            jnp.zeros(wv_.shape, jnp.float32),
+            jnp.zeros((hd,), jnp.float32))
+    (dq, dwk, dwv, dg), dxs = _scan_or_unroll(
+        blk, init, (jnp.arange(nkb), xb, sinb, cosb), nkb, cfg.unroll,
+        stack_out=True)
+    if cfg.unroll:
+        dx = jnp.concatenate([jnp.asarray(d) for d in dxs], axis=1)
+    else:
+        dx = jnp.moveaxis(dxs, 0, 1).reshape(B, Skp, D)
+    return (dq.reshape(B, Hq, Sq, hd).astype(q.dtype),
+            dx.astype(xkv.dtype), dwk.astype(wk_.dtype),
+            dwv.astype(wv_.dtype), dg.astype(gamma.dtype),
+            jnp.zeros_like(sin), jnp.zeros_like(cos))
+
+
+_stream.defvjp(_stream_fwd, _stream_bwd)
+
+
+def stream_mem_efficient(q, x_kv, wk, wv, *, sin=None, cos=None,
+                         k_gamma=None, causal=False, window=0, q_offset=0,
+                         norm_eps=1e-6, block_k=512, unroll=False):
+    """TILE_STREAM with memory-efficient backward: K/V tiles re-generated
+    from x_kv in the backward block loop; dW_K/dW_V/dx_kv/dγ accumulate via
+    per-tile ``jax.vjp`` of the generator."""
+    B, Hq, Sq, hd = q.shape
+    Sk = x_kv.shape[1]
+    bk = min(block_k, Sk)
+    nkb = -(-Sk // bk)
+    pad = nkb * bk - Sk
+    use_rope = sin is not None
+    use_norm = k_gamma is not None
+    if pad:
+        x_kv = jnp.pad(x_kv, ((0, 0), (0, pad), (0, 0)))
+        if use_rope:
+            sin = jnp.pad(sin, ((0, pad), (0, 0)))
+            cos = jnp.pad(cos, ((0, pad), (0, 0)))
+    if sin is None:
+        sin = jnp.zeros((nkb * bk, hd // 2), jnp.float32)
+        cos = jnp.zeros((nkb * bk, hd // 2), jnp.float32)
+    if k_gamma is None:
+        k_gamma = jnp.zeros((hd,), jnp.float32)
+    cfg = _Cfg(causal=causal, window=window, q_offset=q_offset, block_k=bk,
+               unroll=unroll, kv_len=Sk, use_rope=use_rope,
+               use_norm=use_norm, norm_eps=norm_eps)
+    return _stream(q, x_kv, wk, wv, k_gamma, sin, cos, cfg)

@@ -1,0 +1,257 @@
+"""Blocked (flash-style) pure-jnp compute paths.
+
+These are the *lowerable* equivalents of the Pallas kernels: same tiling
+structure, expressed as ``lax.scan`` over KV blocks / SSD chunks so that the
+CPU-hosted dry-run compiles with bounded memory (no S×S score
+materialization).  ``unroll=True`` python-unrolls the block loop — used by
+the dry-run's depth probes so XLA cost analysis (which counts while-loop
+bodies once) sees every FLOP.
+
+Numerics match kernels/ref.py oracles exactly (tests assert it).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _block_count(s: int, b: int) -> int:
+    return -(-s // b)
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = False, window: int = 0,
+                        q_offset: int = 0, block_k: int = 512,
+                        unroll: bool = False,
+                        mem_efficient: bool = True) -> jax.Array:
+    """GQA flash attention: q (B,Hq,Sq,hd), k/v (B,Hkv,Sk,hd).
+
+    Online-softmax over KV blocks; peak memory O(Sq·block_k) per head.
+    ``mem_efficient`` routes through the custom-VJP two-pass backward
+    (kernels/flash_vjp.py) so jax.grad stays O(Sq) too.
+    """
+    if mem_efficient:
+        from repro.kernels.flash_vjp import flash_mem_efficient
+        return flash_mem_efficient(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, block_k=block_k,
+                                   unroll=unroll)
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    bk = min(block_k, Sk)
+    nkb = _block_count(Sk, bk)
+    pad = nkb * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd) * scale
+    kb = k.reshape(B, Hkv, nkb, bk, hd).astype(jnp.float32)
+    vb = v.reshape(B, Hkv, nkb, bk, hd).astype(jnp.float32)
+    qpos = jnp.arange(Sq) + q_offset
+
+    def block(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = inp                      # k_j: (B,Hkv,bk,hd)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    js = jnp.arange(nkb)
+    kbs = jnp.moveaxis(kb, 2, 0)
+    vbs = jnp.moveaxis(vb, 2, 0)
+    if unroll:
+        carry = (m0, l0, a0)
+        for j in range(nkb):
+            carry, _ = block(carry, (jnp.asarray(j), kbs[j], vbs[j]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), (js, kbs, vbs))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, Sq, hd)
+    return out.astype(q.dtype)
+
+
+def stream_attention_jnp(q: jax.Array, x_kv: jax.Array, wk: jax.Array,
+                         wv: jax.Array, *, sin=None, cos=None,
+                         k_gamma=None, causal: bool = False,
+                         window: int = 0, q_offset: int = 0,
+                         norm_eps: float = 1e-6, block_k: int = 512,
+                         unroll: bool = False,
+                         mem_efficient: bool = True) -> jax.Array:
+    """Lowerable TILE_STREAM: K/V tiles generated from x_kv inside the
+    block loop (never materialized at full length), cross-forwarded straight
+    into the online-softmax update — the jnp mirror of
+    kernels/stream_attention.py."""
+    if mem_efficient:
+        from repro.kernels.flash_vjp import stream_mem_efficient
+        return stream_mem_efficient(
+            q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
+            causal=causal, window=window, q_offset=q_offset,
+            norm_eps=norm_eps, block_k=block_k, unroll=unroll)
+    B, Hq, Sq, hd = q.shape
+    Sk, D = x_kv.shape[1], x_kv.shape[2]
+    Hkv = wk.shape[1]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    bk = min(block_k, Sk)
+    nkb = _block_count(Sk, bk)
+    pad = nkb * bk - Sk
+    if pad:
+        x_kv = jnp.pad(x_kv, ((0, 0), (0, pad), (0, 0)))
+        if sin is not None:
+            sin = jnp.pad(sin, ((0, pad), (0, 0)))
+            cos = jnp.pad(cos, ((0, pad), (0, 0)))
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd) * scale
+    xb = jnp.moveaxis(x_kv.reshape(B, nkb, bk, D), 1, 0)
+    sinb = jnp.moveaxis(sin.reshape(nkb, bk, hd // 2), 0, 0) if sin is not None else None
+    qpos = jnp.arange(Sq) + q_offset
+    wk2 = wk.reshape(D, Hkv * hd)
+    wv2 = wv.reshape(D, Hkv * hd)
+
+    def block(carry, inp):
+        m_prev, l_prev, acc = carry
+        if sin is not None:
+            j, x_j, sin_j, cos_j = inp
+        else:
+            j, x_j = inp
+        # --- generate this KV tile on the fly (cross-forwarding) ---
+        k_j = jnp.dot(x_j.astype(jnp.float32), wk2.astype(jnp.float32))
+        v_j = jnp.dot(x_j.astype(jnp.float32), wv2.astype(jnp.float32))
+        k_j = k_j.reshape(B, bk, Hkv, hd)
+        v_j = v_j.reshape(B, bk, Hkv, hd).transpose(0, 2, 1, 3)
+        if k_gamma is not None:
+            var = jnp.mean(k_j * k_j, axis=-1, keepdims=True)
+            k_j = k_j * jax.lax.rsqrt(var + norm_eps) \
+                * k_gamma.astype(jnp.float32)[None, None, None, :]
+        if sin is not None:
+            half = hd // 2
+            k1, k2 = k_j[..., :half], k_j[..., half:]
+            s_ = sin_j[None, :, None, :]
+            c_ = cos_j[None, :, None, :]
+            k_j = jnp.concatenate([k1 * c_ - k2 * s_, k2 * c_ + k1 * s_],
+                                  axis=-1)
+        k_j = k_j.transpose(0, 2, 1, 3)                    # (B,Hkv,bk,hd)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    js = jnp.arange(nkb)
+    if sin is not None:
+        sins = sin.reshape(nkb, bk, hd // 2)
+        coss = cos.reshape(nkb, bk, hd // 2)
+        xs = (js, xb, sins, coss)
+    else:
+        xs = (js, xb)
+    if unroll:
+        carry = (m0, l0, a0)
+        for j in range(nkb):
+            carry, _ = block(carry, jax.tree.map(lambda a: a[j], xs))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), xs)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, Sq, hd)
+    return out.astype(q.dtype)
+
+
+def ssd_chunked_jnp(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, *, chunk: int = 128,
+                    initial_state: Optional[jax.Array] = None,
+                    unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (dense matmuls per chunk, scan over chunks) — the jnp
+    mirror of kernels/ssd_scan.py.  Shapes as ref_ssd."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    ch = min(chunk, S)
+    nc = _block_count(S, ch)
+    pad = nc * ch - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    xf = x.astype(jnp.float32).reshape(B, nc, ch, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, ch, H)
+    bf = b.astype(jnp.float32).reshape(B, nc, ch, N)
+    cf = c.astype(jnp.float32).reshape(B, nc, ch, N)
+    af = a.astype(jnp.float32)
+    # mask padded steps: dt=0 -> decay 1, no input
+    if pad:
+        valid = (jnp.arange(nc * ch) < S).reshape(nc, ch)
+        dtf = dtf * valid[None, :, :, None]
+
+    tri = (jnp.arange(ch)[:, None] >= jnp.arange(ch)[None, :])
+
+    def chunk_step(state, inp):
+        x_c, dt_c, b_c, c_c = inp              # (B,ch,H,P),(B,ch,H),(B,ch,N)
+        dta = dt_c * af[None, None, :]         # (B,ch,H)
+        ld = jnp.cumsum(dta, axis=1)           # inclusive log-decay
+        gamma = ld[:, :, None, :] - ld[:, None, :, :]      # (B,ch,ch,H)
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)          # (B,ch,ch)
+        m = jnp.where(tri[None, :, :, None], jnp.exp(gamma)
+                      * cb[..., None], 0.0)                # (B,ch,ch,H)
+        u = x_c * dt_c[..., None]                          # (B,ch,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, u)
+        c_state = jnp.einsum("bin,bhpn->bihp", c_c, state)
+        y = y_intra + jnp.exp(ld)[..., None] * c_state
+        ld_last = ld[:, -1]                                # (B,H)
+        w = jnp.exp(ld_last[:, None] - ld)[..., None] * u  # (B,ch,H,P)
+        state = (jnp.exp(ld_last)[..., None, None] * state
+                 + jnp.einsum("bjhp,bjn->bhpn", w, b_c))
+        return state, y
+
+    state0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    if unroll:
+        state, ys = state0, []
+        for j in range(nc):
+            state, y = chunk_step(state, jax.tree.map(lambda a_: a_[j], xs))
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)
+    else:
+        state, ys = jax.lax.scan(chunk_step, state0, xs)
+        y = jnp.moveaxis(ys, 0, 1)
+    y = y.reshape(B, nc * ch, H, P)[:, :S]
+    return y.astype(x.dtype), state

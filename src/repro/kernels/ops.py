@@ -1,0 +1,238 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles shape padding (MXU alignment), backend selection, and the paper's
+three execution modes:
+
+* ``NON_STREAM``   — unfused jnp with ``optimization_barrier`` between every
+  matmul: Q, K, V, A, P all materialize (off-chip round-trips in the paper's
+  baseline CIM systems).
+* ``LAYER_STREAM`` — K/V materialized once (TranCIM pipeline mode), then
+  flash attention streams them.
+* ``TILE_STREAM``  — StreamDCIM: fused KV-generation + attention; K/V never
+  exist in HBM.
+
+Backend selection: Pallas TPU kernels lower natively on TPU; on CPU they run
+in ``interpret=True`` mode (Python-emulated, used by tests/benchmarks at
+reduced size).  Model code that must ``lower().compile()`` for the CPU-hosted
+dry-run uses the jnp paths (``use_pallas=False``) — same math, same FLOPs;
+the dataflow deltas are modeled analytically in ``benchmarks/`` (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runtime
+from repro.core.types import ExecutionMode
+from repro.kernels import jnp_blocked as JB
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.stream_attention import stream_attention
+from repro.kernels.tile_gemm import tile_gemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> Tuple[jax.Array, int]:
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad), size
+
+
+def _pick_block(seq: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that keeps seq padding sane."""
+    b = preferred
+    while b > 128 and seq % b and seq < b:
+        b //= 2
+    return max(min(b, preferred), 8 if seq < 128 else 128)
+
+
+def multi_head_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = False, window: int = 0,
+                         q_offset: int = 0,
+                         use_pallas: bool = False,
+                         block_q: int = 256, block_k: int = 256) -> jax.Array:
+    """GQA attention: q (B,Hq,Sq,hd), k/v (B,Hkv,Sk,hd) -> (B,Hq,Sq,hd)."""
+    if not use_pallas:
+        return JB.flash_attention_jnp(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            block_k=runtime.get("block_k", block_k),
+            unroll=runtime.get("unroll", False))
+    B, Hq, Sq, hd = q.shape
+    scale = hd ** -0.5
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(k.shape[2], block_k)
+    kv_len = k.shape[2]
+    q, sq0 = _pad_axis(q, 2, bq)
+    k, _ = _pad_axis(k, 2, bk)
+    v, _ = _pad_axis(v, 2, bk)
+    q, _ = _pad_axis(q, 3, 128)
+    k, hd0 = _pad_axis(k, 3, 128)
+    v, _ = _pad_axis(v, 3, 128)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, scale=scale, kv_len=kv_len,
+                          block_q=bq, block_k=bk,
+                          interpret=not _on_tpu())
+    return out[:, :, :sq0, :hd0]
+
+
+def streaming_attention(q: jax.Array, x_kv: jax.Array, wk: jax.Array,
+                        wv: jax.Array, *,
+                        sin: Optional[jax.Array] = None,
+                        cos: Optional[jax.Array] = None,
+                        k_gamma: Optional[jax.Array] = None,
+                        causal: bool = False, window: int = 0,
+                        q_offset: int = 0, norm_eps: float = 1e-6,
+                        use_pallas: bool = False,
+                        block_q: int = 256, block_k: int = 256) -> jax.Array:
+    """TILE_STREAM fused KV-gen+attention (see stream_attention.py)."""
+    if not use_pallas:
+        return JB.stream_attention_jnp(
+            q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
+            causal=causal, window=window, q_offset=q_offset,
+            norm_eps=norm_eps, block_k=runtime.get("block_k", block_k),
+            unroll=runtime.get("unroll", False))
+    B, Hq, Sq, hd = q.shape
+    Sk = x_kv.shape[1]
+    scale = hd ** -0.5
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    q, sq0 = _pad_axis(q, 2, bq)
+    x_kv, _ = _pad_axis(x_kv, 1, bk)
+    if sin is not None:
+        sin, _ = _pad_axis(sin, 0, bk)
+        cos, _ = _pad_axis(cos, 0, bk)
+    out = stream_attention(q, x_kv, wk, wv, sin=sin, cos=cos,
+                           k_gamma=k_gamma, causal=causal, window=window,
+                           q_offset=q_offset, scale=scale, norm_eps=norm_eps,
+                           kv_len=Sk, block_q=bq, block_k=bk,
+                           interpret=not _on_tpu())
+    return out[:, :, :sq0, :]
+
+
+def mla_latent_attention(q_cat: jax.Array, k_cat: jax.Array, c: jax.Array,
+                         *, causal: bool = True,
+                         use_pallas: bool = False,
+                         block_k: int = 512) -> jax.Array:
+    """MLA absorbed-form attention == MQA over the shared latent.
+
+    q_cat: (B, H, Sq, kvr+dr) scaled queries; k_cat: (B, 1, Sk, kvr+dr);
+    c: (B, 1, Sk, kvr) latent 'values'.  Returns latent context
+    (B, H, Sq, kvr).  The Pallas path pads the qk width to a lane multiple
+    (zero dims don't change scores) and runs the flash kernel with an
+    independent V width — the kernel-level realization of the paper's
+    strongest tile-streaming case (K/V never exist; the latent IS the
+    cache).
+    """
+    if not use_pallas:
+        return JB.flash_attention_jnp(
+            q_cat, k_cat, c, causal=causal,
+            block_k=runtime.get("block_k", block_k),
+            unroll=runtime.get("unroll", False))
+    B, H, Sq, dqk = q_cat.shape
+    Sk = k_cat.shape[2]
+    bq = _pick_block(Sq, 256)
+    bk = _pick_block(Sk, block_k)
+    q_cat, sq0 = _pad_axis(q_cat, 2, bq)
+    k_cat, _ = _pad_axis(k_cat, 2, bk)
+    c_pad, _ = _pad_axis(c, 2, bk)
+    q_cat, _ = _pad_axis(q_cat, 3, 128)
+    k_cat, _ = _pad_axis(k_cat, 3, 128)
+    c_pad, hv0 = _pad_axis(c_pad, 3, 128)
+    # q_cat arrives pre-scaled for a hd^-0.5 attention at the *unpadded*
+    # qk width — apply exactly that (padding must not change the scale).
+    out = flash_attention(q_cat, k_cat, c_pad, causal=causal,
+                          scale=dqk ** -0.5,
+                          kv_len=Sk, block_q=bq, block_k=bk,
+                          interpret=not _on_tpu())
+    return out[:, :, :sq0, :hv0]
+
+
+def projection(x: jax.Array, w: jax.Array, *,
+               use_pallas: bool = False) -> jax.Array:
+    """(..., K) @ (K, N) with f32 accumulation; weight-stationary on Pallas.
+    ``runtime.flags(quantize_proj=True)`` routes through the int8 path
+    (the paper's INT16-CIM precision knob -> v5e int8 MXU)."""
+    if runtime.get("quantize_proj", False):
+        from repro.kernels.quant import int8_matmul
+        return int8_matmul(x, w)
+    if not use_pallas:
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    x2, m0 = _pad_axis(x2, 0, 128)
+    out = tile_gemm(x2, w, interpret=not _on_tpu())
+    return out[:m0].reshape(*lead, w.shape[1])
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: int = 128,
+        use_pallas: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD scan -> (y, final_state)."""
+    if not use_pallas:
+        return JB.ssd_chunked_jnp(x, dt, a, b, c, chunk=chunk,
+                                  unroll=runtime.get("unroll", False))
+    S = x.shape[1]
+    ch = min(chunk, S)
+    x, s0 = _pad_axis(x, 1, ch)
+    dt, _ = _pad_axis(dt, 1, ch)
+    b, _ = _pad_axis(b, 1, ch)
+    c, _ = _pad_axis(c, 1, ch)
+    y, state = ssd_scan(x, dt, a, b, c, chunk=ch, seq_len=s0,
+                        interpret=not _on_tpu())
+    return y[:, :s0], state
+
+
+# ---------------------------------------------------------------------------
+# Execution-mode dispatch: the paper's three comparison systems for one
+# attention layer given pre-computed Q and the raw KV-side activations.
+# ---------------------------------------------------------------------------
+
+def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
+                      wk: jax.Array, wv: jax.Array, *,
+                      sin: Optional[jax.Array] = None,
+                      cos: Optional[jax.Array] = None,
+                      k_gamma: Optional[jax.Array] = None,
+                      causal: bool = False, window: int = 0,
+                      q_offset: int = 0, norm_eps: float = 1e-6,
+                      use_pallas: bool = False) -> jax.Array:
+    """Dispatch one attention layer through NON_STREAM / LAYER_STREAM /
+    TILE_STREAM.  All three are numerically equivalent (tests assert it);
+    they differ in fusion structure / HBM traffic."""
+    if mode == ExecutionMode.TILE_STREAM:
+        return streaming_attention(
+            q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
+            causal=causal, window=window, q_offset=q_offset,
+            norm_eps=norm_eps, use_pallas=use_pallas)
+
+    # Materialize K, V (the "CIM rewriting" both baselines pay).
+    k = jnp.einsum("bsd,dhe->bhse", x_kv, wk.astype(x_kv.dtype))
+    v = jnp.einsum("bsd,dhe->bhse", x_kv, wv.astype(x_kv.dtype))
+    if k_gamma is not None:
+        k = ref.rms_norm(k, k_gamma, eps=norm_eps)
+    if sin is not None:
+        k = ref.apply_rope(k, sin, cos)
+
+    if mode == ExecutionMode.NON_STREAM:
+        # Force every intermediate to materialize: no cross-op fusion.
+        q = jax.lax.optimization_barrier(q)
+        k = jax.lax.optimization_barrier(k)
+        v = jax.lax.optimization_barrier(v)
+        out = ref.ref_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)
+        return jax.lax.optimization_barrier(out)
+
+    # LAYER_STREAM: flash attention over materialized K/V.
+    return multi_head_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, use_pallas=use_pallas)

@@ -1,0 +1,44 @@
+"""Quantized projection path — the paper's precision knob on TPU.
+
+StreamDCIM runs attention at INT16 on its CIM arrays (§III-A).  The TPU
+analogue is int8 MXU matmuls (v5e: 394 TOPS int8 = 2× bf16): weights are
+quantized per-output-channel, activations per-row (dynamic), accumulation
+in int32, dequantized on the way out.  Enabled via
+``runtime.flags(quantize_proj=True)`` on the MLP/projection path —
+benchmarks/bench_stream_modes.py uses the 2× int8 peak in its projections.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8: x (..., K) -> (int8, scales (..., 1))."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_cols(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-channel int8: w (K, N) -> (int8, scales (1, N))."""
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(..., K) @ (K, N) through int8 with int32 accumulation."""
+    lead = x.shape[:-1]
+    xq, sx = quantize_rows(x.reshape(-1, x.shape[-1]).astype(jnp.float32))
+    wq, sw = quantize_cols(w.astype(jnp.float32))
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32) if jax.default_backend() == "cpu" else xq,
+        wq.astype(jnp.int32) if jax.default_backend() == "cpu" else wq,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * sx * sw
+    return out.reshape(*lead, w.shape[1]).astype(x.dtype)

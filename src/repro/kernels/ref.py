@@ -1,0 +1,189 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the numerics the kernels must match (``assert_allclose`` in
+tests, interpret-mode validation on CPU).  They are also the NON_STREAM
+execution path of the paper reproduction (every intermediate materialized).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: avoids NaN rows when a
+                 # query attends to zero keys (fully-masked sliding windows).
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate-half RoPE.  x: (..., seq, head_dim); sin/cos: (seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    shape = (1,) * (x.ndim - 2) + sin.shape
+    sin = sin.reshape(shape).astype(x.dtype)
+    cos = cos.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float = 10_000.0,
+                offset: int = 0) -> Tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def _attn_mask(sq: int, sk: int, causal: bool, window: int,
+               q_offset: int) -> Optional[jax.Array]:
+    """(sq, sk) boolean mask — True = attend.  q_offset aligns decode steps."""
+    if not causal and window <= 0:
+        return None
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    return mask
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, window: int = 0, q_offset: int = 0,
+                  scale: Optional[float] = None,
+                  return_scores: bool = False):
+    """Reference multi-head attention with GQA.
+
+    q: (B, Hq, Sq, hd);  k/v: (B, Hkv, Sk, hd).  Returns (B, Hq, Sq, hd)
+    and, optionally, token-importance scores (B, Sk) = column-mean of the
+    attention probabilities over all heads & queries (the paper's DTPU
+    ranking signal, SpAtten/Evo-ViT style).
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    mask = _attn_mask(Sq, k.shape[2], causal, window, q_offset)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    o = o.reshape(B, Hq, Sq, hd).astype(q.dtype)
+    if return_scores:
+        scores = p.sum(axis=(1, 2, 3)) / (Hq * Sq)   # (B, Sk) column mean
+        return o, scores
+    return o
+
+
+def ref_stream_attention(q: jax.Array, x_kv: jax.Array,
+                         wk: jax.Array, wv: jax.Array, *,
+                         sin: Optional[jax.Array] = None,
+                         cos: Optional[jax.Array] = None,
+                         k_gamma: Optional[jax.Array] = None,
+                         causal: bool = False, window: int = 0,
+                         q_offset: int = 0,
+                         return_scores: bool = False):
+    """Oracle for the fused mixed-stationary cross-forwarding kernel.
+
+    The kernel computes K = rope(qknorm(x_kv @ wk)) and V = x_kv @ wv on the
+    fly, tile by tile, and feeds them straight into flash attention —
+    K and V never exist in HBM.  This oracle materializes them.
+
+    q:    (B, Hq, Sq, hd)   — already projected + roped (Q-CIM analogue)
+    x_kv: (B, Sk, D)        — KV-side token activations (other modality for
+                               cross-attention; same sequence for self)
+    wk/wv: (D, Hkv, hd)
+    """
+    k = jnp.einsum("bsd,dhe->bhse", x_kv.astype(jnp.float32),
+                   wk.astype(jnp.float32))
+    v = jnp.einsum("bsd,dhe->bhse", x_kv.astype(jnp.float32),
+                   wv.astype(jnp.float32))
+    if k_gamma is not None:
+        k = rms_norm(k, k_gamma.astype(jnp.float32))
+    if sin is not None:
+        k = apply_rope(k, sin, cos)
+    return ref_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                         causal=causal, window=window, q_offset=q_offset,
+                         return_scores=return_scores)
+
+
+def ref_tile_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (M, K) @ w: (K, N) with f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, *, chunk: int = 64,
+            initial_state: Optional[jax.Array] = None,
+            return_final_state: bool = False):
+    """Mamba-2 SSD (state-space duality) reference — naive sequential scan.
+
+    x:  (B, S, H, P)   — per-head inputs (P = head dim)
+    dt: (B, S, H)      — softplus-activated step sizes (already positive)
+    a:  (H,)           — negative decay rates (A = -exp(a_log))
+    b:  (B, S, N)      — input projection (shared across heads, G=1)
+    c:  (B, S, N)      — output projection
+    Returns y: (B, S, H, P) [and final state (B, H, P, N)].
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    decay = jnp.exp(dtf * a.astype(jnp.float32)[None, None, :])  # (B,S,H)
+
+    def step(state, inputs):
+        xt, dtt, dct, bt, ct = inputs
+        # state: (B, H, P, N)
+        state = state * dct[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    state0 = (jnp.zeros((B, H, P, N), jnp.float32)
+              if initial_state is None else initial_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(decay, 1, 0), jnp.moveaxis(bf, 1, 0),
+          jnp.moveaxis(cf, 1, 0))
+    final, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def ref_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_len, *, window: int = 0) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: (B, Hq, 1, hd); caches: (B, Hkv, Smax, hd); cache_len: () or (B,) int —
+    number of valid cache entries (new token's K/V already written).
+    """
+    B, Hq, _, hd = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32))
+    s *= hd ** -0.5
+    pos = jnp.arange(Smax)[None, :]
+    clen = jnp.asarray(cache_len).reshape(-1, 1)           # (B,1) or (1,1)
+    valid = pos < clen
+    if window > 0:
+        valid &= pos > clen - 1 - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, hd).astype(q.dtype)

@@ -1,0 +1,118 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel — tile-streaming applied to SSMs.
+
+The SSD algorithm (state-space duality, arXiv:2405.21060) splits the
+sequence into chunks: within a chunk the recurrence is a *masked quadratic
+matmul* (exactly the shape of an attention tile), across chunks a small
+state (P×N per head) carries forward.  This mirrors StreamDCIM's dataflow:
+the chunk tiles stream through VMEM, the carried state is the stationary
+operand, and chunk tile DMA double-buffers against MXU compute.  The paper's
+attention-specific technique is inapplicable to attention-free archs
+(DESIGN.md §4 — mamba2-780m); this kernel is the *adapted* insight.
+
+Grid: (batch, heads, chunks) — chunks innermost; the inter-chunk state lives
+in VMEM scratch that persists across chunk grid steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_scr, *, chunk: int, num_chunks: int, seq_len: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (chunk, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (chunk,)
+    a = a_ref[0, 0]                                    # scalar decay rate (<0)
+    b = b_ref[0].astype(jnp.float32)                   # (chunk, N)
+    c = c_ref[0].astype(jnp.float32)                   # (chunk, N)
+
+    # Sequence-pad masking: zero the contribution of padded steps.
+    pos = ci * chunk + jax.lax.iota(jnp.int32, chunk)
+    valid = (pos < seq_len).astype(jnp.float32)
+    dt = dt * valid                                    # decay 1, no input
+
+    dta = dt * a                                       # log-decay per step
+    ld = jnp.cumsum(dta)                               # (chunk,) inclusive
+    # Gamma[t, s] = exp(LD_t - LD_s) for t >= s (prod of decays in (s, t]).
+    gamma = ld[:, None] - ld[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    m = jnp.where(tri, jnp.exp(gamma) * cb, 0.0)       # (chunk, chunk)
+    u = x * dt[:, None]                                # dt-weighted input
+    y_intra = jax.lax.dot_general(m, u, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                             # (P, N)
+    # Inter-chunk: y_t += exp(LD_t) * C_t · state_in
+    c_state = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y_intra + jnp.exp(ld)[:, None] * c_state       # (chunk, P)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # State update: s_out = exp(LD_last)*s_in + sum_s exp(LD_last-LD_s) u_s b_s^T
+    ld_last = ld[chunk - 1]
+    w = jnp.exp(ld_last - ld)[:, None] * u             # (chunk, P)
+    state_scr[...] = (jnp.exp(ld_last) * state
+                      + jax.lax.dot_general(w, b, (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_scr[...]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool = False,
+             seq_len: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Shapes as in ``ref.ref_ssd``:
+
+    x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N) -> y (B,S,H,P),
+    final_state (B,H,P,N).  S must be pre-padded to a chunk multiple;
+    ``seq_len`` is the true length for pad masking.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    ch = min(chunk, S)
+    nc = pl.cdiv(S, ch)
+    seq_len = S if seq_len is None else seq_len
+
+    kernel = functools.partial(_ssd_kernel, chunk=ch, num_chunks=nc,
+                               seq_len=seq_len)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, ch, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, ch, 1), lambda bi, h, ci: (bi, ci, h)),
+            pl.BlockSpec((1, 1), lambda bi, h, ci: (h, 0)),
+            pl.BlockSpec((1, ch, N), lambda bi, h, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, ch, N), lambda bi, h, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ch, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, ci: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a.reshape(H, 1).astype(jnp.float32), b, c)
+    return y, state

@@ -1,0 +1,188 @@
+"""StreamDCIM tile-streaming attention — the paper's core contribution on TPU.
+
+Mixed-stationary cross-forwarding dataflow (paper §II-B) as one fused Pallas
+kernel: ``W_K``/``W_V`` are VMEM-*stationary* (the TBR-CIM "weight part"),
+token tiles of ``x_kv`` *stream* through VMEM (the "input part" — hybrid
+mode's co-residency), and each generated ``K_j``/``V_j`` tile is
+*cross-forwarded* directly into the ``Q·K_j^T`` / ``P·V_j`` MXU ops without
+ever being written to HBM.  The Pallas grid pipeline double-buffers the
+``x_kv`` tile DMA against MXU compute — the ping-pong fine-grained
+compute-rewriting overlap of paper §II-C ("rewriting" = operand DMA).
+
+All KV heads are generated from a single ``x_kv`` tile read (one DMA feeds
+every head's K and V) — the TPU analogue of one macro broadcasting its
+stationary rows to all other macros over the TBSN.
+
+Grid: (batch, q_blocks, kv_blocks), kv innermost.  Online-softmax state for
+*all* heads of one q-block lives in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _rope_tile(x, sin, cos):
+    """x: (bk, H, hd); sin/cos: (bk, hd//2) -> rotate-half RoPE."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[:, None, :]
+    c = cos[:, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _stream_kernel(q_ref, x_ref, wk_ref, wv_ref, sin_ref, cos_ref, kg_ref,
+                   o_ref, m_scr, l_scr, acc_scr, *,
+                   scale: float, causal: bool, window: int, q_offset: int,
+                   bq: int, bk: int, kv_len: int, num_kv_blocks: int,
+                   hkv: int, group: int, hd: int, use_rope: bool,
+                   use_k_norm: bool, norm_eps: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    i = pl.program_id(1)
+
+    # ---- cross-forwarding step 1: generate this KV tile on the fly ----
+    x = x_ref[0].astype(jnp.float32)                        # (bk, D)
+    wk = wk_ref[...].astype(jnp.float32)                    # (D, Hkv*hd)
+    wv = wv_ref[...].astype(jnp.float32)
+    k_all = jax.lax.dot_general(x, wk, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    v_all = jax.lax.dot_general(x, wv, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    k_all = k_all.reshape(bk, hkv, hd)
+    v_all = v_all.reshape(bk, hkv, hd)
+    if use_k_norm:
+        var = jnp.mean(k_all * k_all, axis=-1, keepdims=True)
+        k_all = k_all * jax.lax.rsqrt(var + norm_eps) * kg_ref[0][None, None, :]
+    if use_rope:
+        k_all = _rope_tile(k_all, sin_ref[...].astype(jnp.float32),
+                           cos_ref[...].astype(jnp.float32))
+
+    # ---- cross-forwarding step 2: K_j, V_j feed QK^T / PV immediately ----
+    q = q_ref[0].astype(jnp.float32)                        # (Hq, bq, hd)
+    q = q.reshape(hkv, group * bq, hd)
+    kt = jnp.transpose(k_all, (1, 0, 2))                    # (Hkv, bk, hd)
+    vt = jnp.transpose(v_all, (1, 0, 2))
+    s = jax.lax.dot_general(q, kt, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    # s: (Hkv, G*bq, bk).  Query position for row r is i*bq + r % bq.
+    row = jax.lax.broadcasted_iota(jnp.int32, (group * bq, bk), 0)
+    qpos = i * bq + q_offset + jax.lax.rem(row, bq)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (group * bq, bk), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+
+    m_prev = m_scr[...]                                     # (Hkv, G*bq, LANES)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    p = jnp.exp(s - m_new[..., :1])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * alpha + jnp.broadcast_to(
+        jnp.sum(p, axis=-1, keepdims=True), l_prev.shape)
+    acc_scr[...] = acc_scr[...] * alpha[..., :1] + jax.lax.dot_general(
+        p, vt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finish():
+        l_final = l_scr[..., :1]
+        l_safe = jnp.where(l_final == 0.0, 1.0, l_final)
+        o = (acc_scr[...] / l_safe).reshape(hkv * group, bq, hd)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def stream_attention(q: jax.Array, x_kv: jax.Array,
+                     wk: jax.Array, wv: jax.Array, *,
+                     sin: Optional[jax.Array] = None,
+                     cos: Optional[jax.Array] = None,
+                     k_gamma: Optional[jax.Array] = None,
+                     causal: bool = False, window: int = 0,
+                     q_offset: int = 0, scale: Optional[float] = None,
+                     norm_eps: float = 1e-6, kv_len: Optional[int] = None,
+                     block_q: int = 256, block_k: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """Fused KV-generation + attention (TILE_STREAM execution mode).
+
+    q:     (B, Hq, Sq, hd) — pre-projected & roped queries (Q-CIM output)
+    x_kv:  (B, Sk, D)      — KV-side activations (other modality for
+                              cross-attention)
+    wk/wv: (D, Hkv, hd)
+    sin/cos: (Sk, hd//2) RoPE tables for key positions (None = no rope —
+              correct for cross-attention to non-positional memories)
+    k_gamma: (hd,) qk-norm gamma for K (qwen3) or None
+
+    Shapes must be pre-padded: Sq % block_q == 0, Sk % block_k == 0,
+    hd % 128 == 0, D % 128 == 0 (see ops.py wrapper).
+    """
+    B, Hq, Sq, hd = q.shape
+    Sk, D = x_kv.shape[1], x_kv.shape[2]
+    kv_len = Sk if kv_len is None else kv_len
+    Hkv = wk.shape[1]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nqb = pl.cdiv(Sq, bq)
+    nkb = pl.cdiv(Sk, bk)
+    if scale is None:
+        scale = hd ** -0.5
+
+    use_rope = sin is not None
+    use_k_norm = k_gamma is not None
+    if sin is None:
+        sin = jnp.zeros((Sk, hd // 2), jnp.float32)
+        cos = jnp.zeros((Sk, hd // 2), jnp.float32)
+    if k_gamma is None:
+        k_gamma = jnp.zeros((hd,), jnp.float32)
+
+    kernel = functools.partial(
+        _stream_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, kv_len=kv_len, num_kv_blocks=nkb,
+        hkv=Hkv, group=G, hd=hd, use_rope=use_rope, use_k_norm=use_k_norm,
+        norm_eps=norm_eps)
+
+    wk2 = wk.reshape(D, Hkv * hd)
+    wv2 = wv.reshape(D, Hkv * hd)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, Hq, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            # Weights: constant index map -> fetched once, VMEM-stationary.
+            pl.BlockSpec((D, Hkv * hd), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((D, Hkv * hd), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((bk, hd // 2), lambda b, i, j: (j, 0)),
+            pl.BlockSpec((bk, hd // 2), lambda b, i, j: (j, 0)),
+            pl.BlockSpec((1, hd), lambda b, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, bq, hd), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G * bq, LANES), jnp.float32),
+            pltpu.VMEM((Hkv, G * bq, LANES), jnp.float32),
+            pltpu.VMEM((Hkv, G * bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, x_kv, wk2, wv2, sin.astype(jnp.float32), cos.astype(jnp.float32),
+      k_gamma.reshape(1, hd))

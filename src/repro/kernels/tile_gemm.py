@@ -1,0 +1,67 @@
+"""Ping-pong weight-stationary tiled matmul — TBR-CIM "normal mode" on TPU.
+
+The paper's normal-mode macros hold weights stationary while input rows
+stream through (used for I·W_Q, I·W_K generation).  Here the weight tile for
+the current (n, k) grid cell stays VMEM-resident across the m-sweep while
+input tiles stream, and the Pallas grid pipeline double-buffers the next
+input tile's DMA against the current MXU op — the compute-rewriting overlap
+of paper §II-C applied to a plain projection.
+
+Grid: (n_blocks, m_blocks, k_blocks).  m is *inner* relative to n so each
+weight column-block is fetched once and reused across every input row-block
+(weight-stationary); k innermost accumulates partial products in scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_scr, *, num_k_blocks: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == num_k_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def tile_gemm(x: jax.Array, w: jax.Array, *,
+              block_m: int = 256, block_n: int = 256, block_k: int = 512,
+              out_dtype: Optional[jnp.dtype] = None,
+              interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N), f32 accumulation.
+
+    M/K/N must be pre-padded to block multiples (ops.py wrapper pads).
+    """
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    nm, nn, nk = pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk)
+    out_dtype = out_dtype or x.dtype
+
+    kernel = functools.partial(_gemm_kernel, num_k_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nn, nm, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda n, m, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda n, m, k: (k, n)),  # stationary in m
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda n, m, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

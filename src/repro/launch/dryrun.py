@@ -1,0 +1,537 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture x input-shape x mesh) cell against the
+production mesh with 512 placeholder host devices, prints
+``memory_analysis()`` / ``cost_analysis()``, parses the post-SPMD HLO for
+collective traffic, and writes a JSON artifact per cell that
+benchmarks/roofline.py and EXPERIMENTS.md consume.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.core import runtime
+from repro.core.types import Family, SHAPES, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.train import optimizer as OPT
+from repro.train import steps as ST
+
+# --- v5e hardware constants (roofline denominators) ---
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 axis)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _parse_groups(line: str, total_devices: int, multi_pod: bool
+                  ) -> Tuple[int, bool]:
+    """Returns (group_size, crosses_pod).  Pods are contiguous device-id
+    halves (mesh axis order is (pod, data, model))."""
+    if not multi_pod:
+        pod_size = total_devices + 1      # nothing can cross
+    else:
+        pod_size = total_devices // 2
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        src_shape = tuple(int(x) for x in m.group(3).split(","))
+        ids = np.arange(int(np.prod(src_shape))).reshape(src_shape)
+        if m.group(4):
+            perm = tuple(int(x) for x in m.group(4).split(","))
+            ids = ids.transpose(perm)
+        groups = ids.reshape(ng, gs)
+        crosses = bool(((groups < pod_size).any(axis=1)
+                        & (groups >= pod_size).any(axis=1)).any())
+        return gs, crosses
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].replace("{", "")
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        crosses = (min(ids) < pod_size <= max(ids)) if ids else False
+        return max(len(ids), 1), crosses
+    return total_devices, False
+
+
+def parse_collectives(hlo_text: str, total_devices: int,
+                      multi_pod: bool = False) -> Dict[str, Any]:
+    """Per-device collective traffic (ring-algorithm byte counts)."""
+    ops: List[Dict[str, Any]] = []
+    ici_bytes = 0.0
+    dcn_bytes = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        size = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        gs, crosses = _parse_groups(line, total_devices, multi_pod)
+        frac = (gs - 1) / gs if gs > 1 else 0.0
+        if kind == "all-reduce":
+            traffic = 2 * size * frac
+        elif kind == "all-gather":
+            traffic = size * frac          # size = gathered result
+        elif kind == "reduce-scatter":
+            traffic = size * (gs - 1)      # size = scattered result
+        elif kind == "all-to-all":
+            traffic = size * frac
+        else:                              # collective-permute
+            traffic = size
+        ops.append({"kind": kind, "bytes": size, "group": gs,
+                    "traffic": traffic, "cross_pod": crosses})
+        if crosses:
+            dcn_bytes += traffic
+        else:
+            ici_bytes += traffic
+    counts: Dict[str, int] = {}
+    for o in ops:
+        counts[o["kind"]] = counts.get(o["kind"], 0) + 1
+    return {"ops": ops, "counts": counts, "ici_traffic": ici_bytes,
+            "dcn_traffic": dcn_bytes}
+
+
+def model_flops(cfg, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch
+    tokens (1 new token per sequence)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch    # decode: fwd only, 1 tok/seq
+
+
+def _stack_depths(cfg) -> Dict[str, int]:
+    """Named layer-stack sizes (the linear-extrapolation unknowns)."""
+    if cfg.family == Family.ENCDEC:
+        return {"enc": cfg.num_encoder_layers or cfg.num_layers,
+                "dec": cfg.num_layers}
+    if cfg.family == Family.CROSSMODAL:
+        return {"pre": cfg.num_layers - cfg.num_coattn_layers,
+                "co": cfg.num_coattn_layers}
+    if cfg.family == Family.MOE and cfg.first_dense_layers:
+        return {"dense": cfg.first_dense_layers,
+                "moe": cfg.num_layers - cfg.first_dense_layers}
+    return {"layers": cfg.num_layers}
+
+
+def _with_depths(cfg, d: Dict[str, int]):
+    if cfg.family == Family.ENCDEC:
+        return dataclasses.replace(cfg, num_encoder_layers=d["enc"],
+                                   num_layers=d["dec"])
+    if cfg.family == Family.CROSSMODAL:
+        return dataclasses.replace(cfg, num_layers=d["pre"] + d["co"],
+                                   num_coattn_layers=d["co"])
+    if cfg.family == Family.MOE and cfg.first_dense_layers:
+        return dataclasses.replace(cfg, first_dense_layers=d["dense"],
+                                   num_layers=d["dense"] + d["moe"])
+    return dataclasses.replace(cfg, num_layers=d["layers"])
+
+
+def probe_plan(cfg):
+    """Probe depth-vectors: base {1,..}, then +1 on each stack."""
+    names = list(_stack_depths(cfg))
+    base = {n: 1 for n in names}
+    plan = [dict(base)]
+    for n in names:
+        v = dict(base)
+        v[n] = 2
+        plan.append(v)
+    return names, plan
+
+
+def extrapolate(names, plan, probe_vals, real_depths) -> float:
+    """cost = base + sum slope_i * n_i from probe measurements."""
+    slopes = {n: probe_vals[i + 1] - probe_vals[0]
+              for i, n in enumerate(names)}
+    base = probe_vals[0] - sum(slopes[n] for n in names)
+    return base + sum(slopes[n] * real_depths[n] for n in names)
+
+
+def auto_microbatches(cfg, shape: ShapeConfig, mesh) -> int:
+    """Smallest power-of-two microbatch count whose per-layer checkpointed
+    activations fit the HBM budget (activation-memory lever, DESIGN.md §5)."""
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    per_dev_seqs = max(shape.global_batch // dp, 1)
+    d_eff = cfg.d_model + (cfg.d_model_y if cfg.family == Family.CROSSMODAL
+                           else 0)
+    if cfg.family == Family.CROSSMODAL:
+        d_eff *= 4        # two streams x (co+self) attention per block
+    if cfg.family == Family.SSM or cfg.family == Family.HYBRID:
+        d_eff += cfg.ssm_expand * cfg.d_model
+    seq = shape.seq_len if cfg.family != Family.ENCDEC else \
+        (shape.seq_len + cfg.encoder_seq)
+    layers = sum(_stack_depths(cfg).values())
+    act = layers * per_dev_seqs * seq * d_eff * 2 * 1.5
+    budget = 6e9
+    mb = 1
+    while act / mb > budget and mb < per_dev_seqs:
+        mb *= 2
+    return mb
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
+               seq_shard_long: bool = True, cfg=None):
+    """Returns (jitted_fn, arg_specs tuple) for one cell."""
+    cfg = cfg or registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    total = int(np.prod(list(mesh.shape.values())))
+
+    pspecs = registry.param_specs(cfg)
+    pshard = SH.param_shardings(pspecs, cfg, mesh)
+
+    if shape.kind == "train":
+        ospecs = jax.eval_shape(OPT.init, pspecs)
+        oshard = OPT.OptState(step=NamedSharding(mesh, P()),
+                              mu=pshard, nu=pshard)
+        bspecs = registry.input_specs(cfg, shape)
+        bshard = SH.batch_shardings(bspecs, mesh)
+        fn = ST.make_train_step(cfg, microbatches=microbatches)
+        jitted = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+        return jitted, (pspecs, ospecs, bspecs), cfg, shape
+
+    if shape.kind == "prefill":
+        bspecs = registry.input_specs(cfg, shape)
+        bshard = SH.batch_shardings(bspecs, mesh)
+        fn = ST.make_prefill_step(cfg, max_len=shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+        return jitted, (pspecs, bspecs), cfg, shape
+
+    # decode
+    seq_sharded = shape.global_batch == 1 and seq_shard_long
+    cspecs = registry.cache_specs(cfg, shape)
+    cshard = SH.cache_shardings(cspecs, cfg, mesh, seq_sharded=seq_sharded)
+    tspecs = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                             jnp.int32)}
+    tshard = SH.batch_shardings(tspecs, mesh) if shape.global_batch > 1 else \
+        jax.tree.map(lambda s: NamedSharding(mesh, P()), tspecs)
+    fn = ST.make_serve_step(cfg)
+    jitted = jax.jit(fn, in_shardings=(pshard, cshard, tshard["tokens"]),
+                     donate_argnums=(1,))
+    return jitted, (pspecs, cspecs, tspecs["tokens"]), cfg, shape
+
+
+def _compile_metrics(jitted, specs, total: int, multi_pod: bool):
+    """Compile + analyze with the while-trip-aware HLO analyzer
+    (launch/hlo_analysis.py) — XLA's own cost_analysis counts loop bodies
+    once and is kept only as the uncorrected reference."""
+    from repro.launch import hlo_analysis as HA
+    lowered = jitted.lower(*specs)
+    compiled = lowered.compile()
+    r = HA.analyze(compiled.as_text(), total_devices=total,
+                   multi_pod=multi_pod)
+    return compiled, {
+        "flops": r["flops"],
+        "bytes": r["bytes"],
+        "ici": r["ici"],
+        "dcn": r["dcn"],
+        "counts": r["counts"],
+    }
+
+
+def probe_corrected_costs(arch: str, shape_name: str, mesh, *,
+                          multi_pod: bool) -> Dict[str, Any]:
+    """XLA cost analysis counts while-loop bodies once, so scanned layer
+    stacks are invisible to it.  We compile shallow *unrolled* probes
+    (depth 1, and depth 2 per stack) and extrapolate cost = base +
+    sum(slope_i * depth_i).  Probes run at full width/batch — only depth is
+    reduced — so per-layer costs are exact."""
+    cfg = registry.get_config(arch)
+    total = int(np.prod(list(mesh.shape.values())))
+    names, plan = probe_plan(cfg)
+    vals = []
+    with runtime.flags(unroll=True):
+        for depths in plan:
+            pc = _with_depths(cfg, depths)
+            jitted, specs, _, _ = build_cell(arch, shape_name, mesh,
+                                             microbatches=1, cfg=pc)
+            _, m = _compile_metrics(jitted, specs, total, multi_pod)
+            vals.append(m)
+    real = _stack_depths(cfg)
+    out = {}
+    for key in ("flops", "bytes", "ici", "dcn"):
+        out[key] = extrapolate(names, plan, [v[key] for v in vals], real)
+    out["probe_counts"] = vals[0]["counts"]
+    return out
+
+
+def hint_shardings(names: List[str], mesh) -> Dict[str, Any]:
+    """Build the activation-sharding hint table (distributed/hints.py)."""
+    from jax.sharding import NamedSharding
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    table = {}
+    for n in names:
+        if n == "embed_out":
+            table[n] = NamedSharding(mesh, P(baxes, None, None))
+        elif n in ("attn_q", "attn_out"):
+            # context-parallel: query sequence over 'model'
+            table[n] = NamedSharding(mesh, P(baxes, None, "model", None))
+        elif n == "moe_dispatch":
+            # (E, G, C, D): experts over 'model', groups over batch axes
+            table[n] = NamedSharding(mesh, P("model", baxes, None, None))
+    return table
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Optional[str] = None, microbatches: int = 0,
+             verbose: bool = True, probes: bool = False,
+             hints: Optional[List[str]] = None,
+             tag: str = "", extra_flags: Optional[Dict[str, Any]] = None
+             ) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    total = int(np.prod(list(mesh.shape.values())))
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    skip = registry.cell_supported(arch, shape_name)
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_name, "devices": total}
+    if tag:
+        result["tag"] = tag
+    if hints:
+        result["hints"] = hints
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        _emit(result, out_dir, verbose, tag)
+        return result
+
+    t0 = time.time()
+    try:
+        cfg0 = registry.get_config(arch)
+        shape0 = SHAPES[shape_name]
+        mb = microbatches or auto_microbatches(cfg0, shape0, mesh)
+        jitted, specs, cfg, shape = build_cell(arch, shape_name, mesh,
+                                               microbatches=mb)
+        with runtime.flags(sharding_hints=hint_shardings(hints or [], mesh),
+                           **(extra_flags or {})):
+            lowered = jitted.lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # noqa: BLE001 — dry-run failures are findings
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+        _emit(result, out_dir, verbose, tag)
+        return result
+
+    from repro.launch import hlo_analysis as HA
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    an = HA.analyze(hlo, total_devices=total, multi_pod=multi_pod)
+
+    raw_flops = float(ca.get("flops", 0.0))
+    hlo_flops, hlo_bytes = an["flops"], an["bytes"]
+    ici_traffic, dcn_traffic = an["ici"], an["dcn"]
+    coll = {"counts": an["counts"], "ops": []}
+    corr = None
+    if probes:  # optional cross-validation against unrolled shallow probes
+        try:
+            corr = probe_corrected_costs(arch, shape_name, mesh,
+                                         multi_pod=multi_pod)
+        except Exception as e:  # noqa: BLE001
+            result["probe_error"] = f"{type(e).__name__}: {e}"[:500]
+        if corr:
+            result["probe_flops"] = corr["flops"]
+    mf = model_flops(cfg, shape)
+
+    # Roofline terms (seconds) — per-chip work over per-chip rates.
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    coll_s = ici_traffic / ICI_BW
+    dcn_s = dcn_traffic / (ICI_BW / 10)   # DCN ~ an order slower
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s, "dcn_s": dcn_s}
+    bottleneck = max(terms, key=terms.get)
+
+    result.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "microbatches": mb,
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "raw_flops_uncorrected": raw_flops,
+        "probe_corrected": corr is not None,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / total,
+        "useful_flop_ratio": (mf / total) / hlo_flops if hlo_flops else None,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "total_bytes": (ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes
+                            - ma.alias_size_in_bytes),
+        },
+        "collectives": {"counts": coll["counts"],
+                        "ici_traffic_bytes": ici_traffic,
+                        "dcn_traffic_bytes": dcn_traffic,
+                        "num_ops": len(coll["ops"])},
+        "roofline": {**terms, "bottleneck": bottleneck,
+                     "step_time_est_s": max(terms.values()),
+                     "roofline_fraction":
+                         compute_s / max(max(terms.values()), 1e-30)},
+    })
+    _emit(result, out_dir, verbose, tag)
+    return result
+
+
+def _emit(result: Dict[str, Any], out_dir: Optional[str], verbose: bool,
+          tag: str = ""):
+    if verbose:
+        status = result["status"]
+        line = f"[{result['mesh']:8s}] {result['arch']:18s} {result['shape']:12s} {status}"
+        if status == "ok":
+            r = result["roofline"]
+            mem = result["memory"]["total_bytes"] / 2**30
+            line += (f"  flops/dev={result['hlo_flops_per_device']:.3g}"
+                     f" mem/dev={mem:.2f}GiB"
+                     f" bottleneck={r['bottleneck']}"
+                     f" roofline_frac={r['roofline_fraction']:.3f}"
+                     f" (lower {result['lower_s']}s compile"
+                     f" {result['compile_s']}s)")
+        elif status == "error":
+            line += "  " + result["error"].splitlines()[0][:120]
+        else:
+            line += "  " + result["reason"]
+        print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        slim = dict(result)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(
+            out_dir,
+            f"{result['arch']}__{result['shape']}__{result['mesh']}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(slim, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(registry.ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) on this mesh")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto (fit activation memory)")
+    ap.add_argument("--probes", action="store_true",
+                    help="cross-validate the HLO analyzer against unrolled "
+                         "shallow probe compiles (slow)")
+    ap.add_argument("--hints", default="",
+                    help="comma-separated activation-sharding hints "
+                         "(embed_out,attn_q,attn_out)")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix (perf-iteration runs)")
+    ap.add_argument("--remat-policy", default="none",
+                    choices=["none", "dots"])
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--block-k", type=int, default=0,
+                    help="flash KV block size override")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the hillclimbed beyond-paper preset: "
+                         "embed_out hint, context-parallel attention for "
+                         "non-divisible-head archs, grouped MoE dispatch, "
+                         "block_k=2048")
+    args = ap.parse_args()
+
+    cells: List[Tuple[str, str]] = []
+    if args.all:
+        for arch in registry.ASSIGNED:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        extra = {}
+        hints = [h for h in args.hints.split(",") if h]
+        tag = args.tag
+        if args.remat_policy != "none":
+            extra["remat_policy"] = args.remat_policy
+        if args.moe_groups > 1:
+            extra["moe_groups"] = args.moe_groups
+        if args.block_k:
+            extra["block_k"] = args.block_k
+        if args.optimized:
+            cfg_a = registry.get_config(arch)
+            mesh_probe = {"data": 16, "model": 16}
+
+            class _M:
+                shape = mesh_probe
+            hints = list({*hints, "embed_out"})
+            from repro.distributed import sharding as _SH
+            if cfg_a.num_heads and not _SH.heads_shardable(cfg_a, _M):
+                hints += ["attn_q", "attn_out"]
+            if cfg_a.num_experts:
+                dp = 32 if args.multi_pod else 16
+                extra.setdefault("moe_groups", dp)
+            extra.setdefault("block_k", 2048)
+            tag = tag or "optimized"
+        r = run_cell(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                     microbatches=args.microbatches, probes=args.probes,
+                     hints=hints, tag=tag, extra_flags=extra)
+        if r["status"] == "error":
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

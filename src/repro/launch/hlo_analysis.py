@@ -1,0 +1,285 @@
+"""Static analyzer for post-SPMD optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless
+of trip count, making scanned layer stacks invisible.  This analyzer walks
+the HLO module with loop-trip multipliers:
+
+* parses every computation and instruction (name -> shape symbol table)
+* extracts while-loop trip counts from their condition computations
+  (scan-generated conditions compare the induction var against a constant)
+* propagates a multiplier down the call graph
+  (entry=1; while body/cond x= trip; fusion/call x= 1)
+* FLOPs: 2 * prod(result_dims) * contraction_size for every ``dot``
+* bytes: operand+result bytes of top-level (non-fused-interior)
+  instructions — fusion interiors excluded, matching HBM-traffic semantics
+* collectives: ring-algorithm traffic per op kind x multiplier
+
+Validated against unrolled shallow probes (tests/test_hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "token": 0, "opaque": 0}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_ATTR_CALLS = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_IOTA_GROUPS = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_LIST_GROUPS = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    bytes_ = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, bytes_
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+        elif line.strip() == "}":
+            cur = None
+    return comps
+
+
+def _entry_name(text: str, comps: Dict[str, Computation]) -> Optional[str]:
+    m = re.search(r"^ENTRY %?([\w.\-]+)", text, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+_KNOWN_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan-generated loop conditions compare the induction variable to a
+    constant trip count; take the max int constant in the condition."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = _CONST_INT.search("constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        m = _CONST_INT.search(ins.rest)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(text: str, comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = _entry_name(text, comps)
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry is None:
+        return mult
+    mult[entry] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(len(comps)):
+        changed = False
+        for name, comp in comps.items():
+            m0 = mult.get(name, 0.0)
+            if m0 == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.op == "while":
+                    body = cond = None
+                    mm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                    mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                    if mm:
+                        body = mm.group(1)
+                    if mc:
+                        cond = mc.group(1)
+                    # Prefer XLA's own annotation when present.
+                    mt = _KNOWN_TRIP.search(ins.rest)
+                    if mt:
+                        trips = int(mt.group(1))
+                    else:
+                        trips = _trip_count(comps[cond]) if cond in comps \
+                            else 1
+                    if body in comps:
+                        new = m0 * trips
+                        if mult.get(body, 0.0) < new:
+                            mult[body] = new
+                            changed = True
+                elif ins.op in ("fusion", "call", "conditional", "map",
+                                "reduce", "reduce-window", "scatter", "sort",
+                                "custom-call", "select-and-scatter"):
+                    for mm in _ATTR_CALLS.finditer(ins.rest):
+                        callee = mm.group(1)
+                        if callee in comps and mult.get(callee, 0.0) < m0:
+                            mult[callee] = m0
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _symbol_table(comps: Dict[str, Computation]) -> Dict[str, str]:
+    table = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            table[ins.name] = ins.shape
+    return table
+
+
+def _dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.shape)
+    ops = _OPERAND.findall(ins.rest.split(")", 1)[0])
+    if not ops:
+        return 0.0
+    lhs_shape = symbols.get(ops[0])
+    if lhs_shape is None:
+        return 0.0
+    dims = []
+    for dt, ds in _SHAPE.findall(lhs_shape):
+        dims = [int(x) for x in ds.split(",") if x]
+        break
+    mc = _CONTRACT.search(ins.rest)
+    contract = 1
+    if mc and mc.group(1):
+        for i in (int(x) for x in mc.group(1).split(",")):
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * res_elems * contract
+
+
+def _group_info(rest: str, total: int, multi_pod: bool) -> Tuple[int, bool]:
+    pod = total // 2 if multi_pod else total + 1
+    m = _IOTA_GROUPS.search(rest)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        src = tuple(int(x) for x in m.group(3).split(","))
+        ids = np.arange(int(np.prod(src))).reshape(src)
+        if m.group(4):
+            ids = ids.transpose(tuple(int(x) for x in m.group(4).split(",")))
+        groups = ids.reshape(ng, gs)
+        crosses = bool(((groups < pod).any(1) & (groups >= pod).any(1)).any())
+        return gs, crosses
+    m = _LIST_GROUPS.search(rest)
+    if m:
+        first = m.group(1).split("}")[0].replace("{", "")
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        crosses = (min(ids) < pod <= max(ids)) if ids else False
+        return max(len(ids), 1), crosses
+    return total, False
+
+
+# Ops whose operand/result bytes we count toward HBM traffic at the
+# non-fused level.  Pure control/aliasing ops are free.
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "while", "conditional", "call", "custom-call", "domain",
+             "opt-barrier", "optimization-barrier"}
+
+
+def analyze(text: str, *, total_devices: int, multi_pod: bool) -> Dict:
+    comps = parse_module(text)
+    symbols = _symbol_table(comps)
+    mult = _multipliers(text, comps)
+
+    flops = 0.0
+    bytes_ = 0.0
+    ici = 0.0
+    dcn = 0.0
+    counts: Dict[str, float] = {}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        # fusion-interior computations get bytes-excluded but their dots
+        # still count flops: detect interiors by name convention
+        interior = name.startswith("fused_") or ".fused" in name
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, symbols)
+            elif ins.op in ("convolution",):
+                # rare here; approximate as 2 * result * window elems
+                res_elems, _ = _shape_elems_bytes(ins.shape)
+                flops += m * 2.0 * res_elems
+            if interior:
+                continue
+            if ins.op in _FREE_OPS:
+                continue
+            _, rb = _shape_elems_bytes(ins.shape)
+            ob = 0
+            for opn in _OPERAND.findall(ins.rest.split(")", 1)[0]):
+                sh = symbols.get(opn)
+                if sh is not None:
+                    ob += _shape_elems_bytes(sh)[1]
+            bytes_ += m * (rb + ob)
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in COLLECTIVE_OPS:
+                size = _shape_elems_bytes(ins.shape)[1]
+                gs, crosses = _group_info(ins.rest, total_devices, multi_pod)
+                frac = (gs - 1) / gs if gs > 1 else 0.0
+                if base == "all-reduce":
+                    traffic = 2 * size * frac
+                elif base == "all-gather":
+                    traffic = size * frac
+                elif base == "reduce-scatter":
+                    traffic = size * (gs - 1)
+                elif base == "all-to-all":
+                    traffic = size * frac
+                else:
+                    traffic = size
+                counts[base] = counts.get(base, 0) + m
+                if crosses:
+                    dcn += m * traffic
+                else:
+                    ici += m * traffic
+    return {"flops": flops, "bytes": bytes_, "ici": ici, "dcn": dcn,
+            "counts": {k: int(v) for k, v in counts.items()},
+            "num_computations": len(comps)}

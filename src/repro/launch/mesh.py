@@ -1,0 +1,18 @@
+"""Production mesh builders.  Functions, not module-level constants — merely
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (16 data, 16 model).  Multi-pod: 2 pods
+    (DCN axis) x the same in-pod layout = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh (CPU tests/examples) with the same axis names."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,145 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+MLA compresses K/V into a small latent c_kv (plus a shared roped key) and
+decompresses per head at attention time.  This is the *strongest* case for
+the paper's tile-streaming insight: K and V literally do not exist as
+tensors until attention runs — StreamDCIM's "generate KV tiles in flight"
+is the only sane dataflow.  Prefill/train decompress tile-wise; decode uses
+the absorbed form (latent-space scores) so the cache stays tiny
+(kv_lora_rank + rope_dim per token).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ExecutionMode, ModelConfig
+from repro.kernels import ops, ref
+from repro.models.layers import _pdtype, dense_init
+
+Params = Dict[str, Any]
+
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq_a": dense_init(ks[0], (d, qr), _pdtype(cfg)),
+        "q_norm": jnp.ones((qr,), _pdtype(cfg)),
+        "wq_b": dense_init(ks[1], (qr, H, dn + dr), _pdtype(cfg)),
+        "wkv_a": dense_init(ks[2], (d, kvr + dr), _pdtype(cfg)),
+        "kv_norm": jnp.ones((kvr,), _pdtype(cfg)),
+        "wk_b": dense_init(ks[3], (kvr, H, dn), _pdtype(cfg)),
+        "wv_b": dense_init(ks[4], (kvr, H, dv), _pdtype(cfg)),
+        "wo": dense_init(ks[5], (H, dv, d), _pdtype(cfg)),
+    }
+    return p
+
+
+def _project_q(params: Params, cfg: ModelConfig, x: jax.Array,
+               sin, cos) -> Tuple[jax.Array, jax.Array]:
+    """Returns (q_nope (B,H,S,dn), q_rope (B,H,S,dr))."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = jnp.dot(x, params["wq_a"].astype(x.dtype))
+    cq = ref.rms_norm(cq, params["q_norm"], eps=cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bhse", cq, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    if sin is not None:
+        q_rope = ref.apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _latent(params: Params, cfg: ModelConfig, x: jax.Array, sin, cos):
+    """Returns (c_kv (B,S,kvr) rms-normed, k_rope (B,1,S,dr) roped)."""
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv = jnp.dot(x, params["wkv_a"].astype(x.dtype))
+    c, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    c = ref.rms_norm(c, params["kv_norm"], eps=cfg.norm_eps)
+    k_rope = k_rope[:, None]                       # (B, 1, S, dr)
+    if sin is not None:
+        k_rope = ref.apply_rope(k_rope, sin, cos)
+    return c, k_rope
+
+
+def mla_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                sin=None, cos=None, causal: bool = True,
+                mode: Optional[ExecutionMode] = None,
+                use_pallas: bool = False) -> jax.Array:
+    """Prefill/train path: decompress K/V (tile-wise in TILE_STREAM via the
+    stream kernel over the latent, since K = c_kv @ wk_b is exactly the
+    'KV generated at runtime' pattern)."""
+    mode = mode or cfg.execution_mode
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_rope_head_dim and cfg.qk_nope_head_dim, \
+        cfg.qk_rope_head_dim, cfg.v_head_dim
+    dn = cfg.qk_nope_head_dim
+    kvr = cfg.kv_lora_rank
+    q_nope, q_rope = _project_q(params, cfg, x, sin, cos)
+    c, k_rope = _latent(params, cfg, x, sin, cos)
+
+    # Scores decompose: q_nope·k_nope + q_rope·k_rope.  Absorb wk_b into the
+    # query (q_lat = q_nope @ wk_b^T) so attention runs in latent space —
+    # the TILE_STREAM analogue for MLA (K/V never materialize; the latent
+    # IS the cache).  Structurally this is MQA with one shared 'key'
+    # [c ; k_rope] of width kvr+dr and 'value' c of width kvr, so it
+    # streams through the flash block loop (memory O(S·block) — a (B,H,S,S)
+    # probability tensor would be 4 TiB/device at the 32k prefill shape).
+    q_lat = jnp.einsum("bhse,rhe->bhsr", q_nope,
+                       params["wk_b"].astype(x.dtype))   # (B,H,S,kvr)
+    scale = (dn + dr) ** -0.5
+    # flash applies hd_qk^-0.5; rescale q so the effective scale matches.
+    fake_hd = kvr + dr
+    rescale = scale * (fake_hd ** 0.5)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1) * rescale
+    k_cat = jnp.concatenate([c, k_rope[:, 0]], axis=-1)[:, None]  # (B,1,S,·)
+    ctx_lat = ops.mla_latent_attention(
+        q_cat, k_cat.astype(q_cat.dtype), c[:, None].astype(q_cat.dtype),
+        causal=causal, use_pallas=use_pallas)             # (B,H,S,kvr)
+    out = jnp.einsum("bhsr,rhe->bhse", ctx_lat,
+                     params["wv_b"].astype(x.dtype))     # (B,H,S,dv)
+    return jnp.einsum("bhse,hed->bsd", out, params["wo"].astype(x.dtype))
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    return {"c": jnp.zeros((batch, max_len, kvr), dtype),
+            "k_rope": jnp.zeros((batch, max_len, dr), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def mla_decode(params: Params, cfg: ModelConfig, x: jax.Array, cache: Params
+               ) -> Tuple[jax.Array, Params]:
+    """Absorbed-form decode: scores/context computed in latent space; cache
+    holds only (c_kv, k_rope) per position — (kvr + dr) floats/token."""
+    from repro.models.layers import rope_at
+    B = x.shape[0]
+    pos = cache["len"]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    sin_t, cos_t = rope_at(pos, dr, cfg.rope_theta)
+    q_nope, q_rope = _project_q(params, cfg, x, sin_t, cos_t)
+    c_new, kr_new = _latent(params, cfg, x, sin_t, cos_t)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), pos, 1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new[:, 0].astype(cache["k_rope"].dtype), pos, 1)
+
+    q_lat = jnp.einsum("bhse,rhe->bhsr", q_nope, params["wk_b"].astype(x.dtype))
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bhsr,btr->bhst", q_lat.astype(jnp.float32),
+                    c_cache.astype(jnp.float32))
+         + jnp.einsum("bhse,bte->bhst", q_rope.astype(jnp.float32),
+                      kr_cache.astype(jnp.float32))) * scale
+    t = jnp.arange(c_cache.shape[1])[None, None, None, :]
+    s = jnp.where(t <= pos, s, ref.NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bhsr", p_attn, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhsr,rhe->bhse", ctx_lat.astype(x.dtype),
+                     params["wv_b"].astype(x.dtype))
+    o = jnp.einsum("bhse,hed->bsd", out, params["wo"].astype(x.dtype))
+    return o, {"c": c_cache, "k_rope": kr_cache, "len": pos + 1}

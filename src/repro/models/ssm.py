@@ -1,0 +1,141 @@
+"""Mamba-2 (SSD) mixer — attention-free state-space layer (arXiv:2405.21060).
+
+The StreamDCIM attention technique is inapplicable here (no Q·K^T); the
+*insight* transfers to the SSD chunk dataflow via kernels/ssd_scan.py
+(DESIGN.md §4).  Used standalone (mamba2-780m) and inside hymba's hybrid
+heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+from repro.kernels import ops, ref
+from repro.models.layers import _pdtype, dense_init
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    nheads = cfg.ssm_heads or max(d_inner // cfg.ssm_head_dim, 1)
+    headdim = d_inner // nheads
+    return d, d_inner, nheads, headdim
+
+
+def ssm_init(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Params:
+    d, d_inner, nheads, headdim = ssm_dims(cfg, d_model)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    # in_proj produces [x (d_inner), z (d_inner), B (N), C (N), dt (nheads)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * N + nheads),
+                              _pdtype(cfg)),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, d_inner + 2 * N),
+                             _pdtype(cfg), scale=0.5),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_gamma": jnp.ones((d_inner,), _pdtype(cfg)),
+        "out_proj": dense_init(ks[2], (d_inner, d), _pdtype(cfg)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array, d_inner: int, nheads: int):
+    N = cfg.ssm_state
+    x = proj[..., :d_inner]
+    z = proj[..., d_inner:2 * d_inner]
+    b = proj[..., 2 * d_inner:2 * d_inner + N]
+    c = proj[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = proj[..., 2 * d_inner + 2 * N:]
+    return x, z, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+    state (B, K-1, C) carries history for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_state
+
+
+def ssm_forward(params: Params, cfg: ModelConfig, xin: jax.Array, *,
+                d_model: Optional[int] = None,
+                use_pallas: bool = False) -> jax.Array:
+    """xin: (B, S, D) pre-normed -> (B, S, D)."""
+    d, d_inner, nheads, headdim = ssm_dims(cfg, d_model)
+    B, S, _ = xin.shape
+    proj = jnp.dot(xin, params["in_proj"].astype(xin.dtype))
+    x, z, b, c, dt = _split_proj(cfg, proj, d_inner, nheads)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, _ = _causal_conv(xbc, params["conv_w"].astype(xin.dtype))
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + cfg.ssm_state]
+    c = xbc[..., d_inner + cfg.ssm_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    a = -jnp.exp(params["a_log"])
+    xh = x.reshape(B, S, nheads, headdim)
+    y, _ = ops.ssd(xh, dt, a, b, c, chunk=cfg.ssm_chunk,
+                   use_pallas=use_pallas)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    y = ref.rms_norm(y * jax.nn.silu(z), params["norm_gamma"],
+                     eps=cfg.norm_eps)
+    return jnp.dot(y, params["out_proj"].astype(xin.dtype))
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype,
+                   d_model: Optional[int] = None) -> Params:
+    d, d_inner, nheads, headdim = ssm_dims(cfg, d_model)
+    N = cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner + 2 * N), dtype),
+        "state": jnp.zeros((batch, nheads, headdim, N), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_decode(params: Params, cfg: ModelConfig, xin: jax.Array,
+               cache: Params, *, d_model: Optional[int] = None
+               ) -> Tuple[jax.Array, Params]:
+    """Single-token recurrent step.  xin: (B, 1, D)."""
+    d, d_inner, nheads, headdim = ssm_dims(cfg, d_model)
+    B = xin.shape[0]
+    proj = jnp.dot(xin, params["in_proj"].astype(xin.dtype))
+    x, z, b, c, dt = _split_proj(cfg, proj, d_inner, nheads)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"].astype(xin.dtype),
+                                   state=cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + cfg.ssm_state]
+    c = xbc[..., d_inner + cfg.ssm_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = x.reshape(B, nheads, headdim).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :, None, None] * a[None, :, None, None])
+    state = (cache["state"] * decay
+             + jnp.einsum("bhp,bn->bhpn", xh * dt[:, 0, :, None],
+                          b[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, c[:, 0].astype(jnp.float32))
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(xin.dtype)
+    y = ref.rms_norm(y * jax.nn.silu(z), params["norm_gamma"],
+                     eps=cfg.norm_eps)
+    out = jnp.dot(y, params["out_proj"].astype(xin.dtype))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype),
+                 "state": state, "len": cache["len"] + 1}

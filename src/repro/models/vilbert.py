@@ -1,0 +1,209 @@
+"""ViLBERT-style two-stream multimodal encoder (arXiv:1908.02265) — the
+paper's own evaluation workload (§III: ViLBERT-base/large, VQA v2.0,
+N_X = N_Y = 4096).
+
+Structure: language stream runs ``text_pre_layers`` plain encoder layers,
+then both streams run ``num_coattn_layers`` co-TRM blocks.  A co-TRM block
+per stream = co-attention (Q from own stream; K/V *generated from the other
+modality's activations* — StreamDCIM's cross-forwarding case) +
+self-attention + FFN.
+
+DTPU token pruning (core/pruning.py) runs between co-TRM blocks: each
+stream's tokens are ranked by the attention mass the *other* stream pays
+them (cross-attention column scores), and both streams are compacted on a
+static keep schedule.  The vision frontend is a stub: region/patch
+embeddings arrive precomputed (B, S_x, D_x).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pruning as P
+from repro.core.types import ExecutionMode, ModelConfig
+from repro.core.scan_utils import maybe_scan
+from repro.kernels import ops, ref
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _xattn_init(key, cfg: ModelConfig, d_q: int, d_kv: int,
+                num_heads: int, head_dim: int) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"wq": L.dense_init(ks[0], (d_q, num_heads, head_dim), dt),
+            "wk": L.dense_init(ks[1], (d_kv, num_heads, head_dim), dt),
+            "wv": L.dense_init(ks[2], (d_kv, num_heads, head_dim), dt),
+            "wo": L.dense_init(ks[3], (num_heads, head_dim, d_q), dt)}
+
+
+def _stream_block_init(key, cfg: ModelConfig, d: int, d_other: int,
+                       heads: int, d_ff: int) -> Params:
+    hd = d // heads
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_co": L.layer_norm_init(cfg, d),
+        "co_attn": _xattn_init(ks[0], cfg, d, d_other, heads, hd),
+        "ln_self": L.layer_norm_init(cfg, d),
+        "self_attn": _xattn_init(ks[1], cfg, d, d, heads, hd),
+        "ln_ff": L.layer_norm_init(cfg, d),
+        "mlp": L.mlp_init(ks[2], cfg, d_model=d, d_ff=d_ff),
+    }
+
+
+def _text_layer_init(key, cfg: ModelConfig) -> Params:
+    d, h, f = cfg.d_model_y, cfg.num_heads_y, cfg.d_ff_y
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.layer_norm_init(cfg, d),
+            "attn": _xattn_init(ks[0], cfg, d, d, h, d // h),
+            "ln2": L.layer_norm_init(cfg, d),
+            "mlp": L.mlp_init(ks[1], cfg, d_model=d, d_ff=f)}
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    """Vision stream X: width cfg.d_model; language stream Y: cfg.d_model_y."""
+    ks = jax.random.split(key, 8)
+    n_pre = cfg.num_layers - cfg.num_coattn_layers
+    pre_keys = jax.random.split(ks[0], max(n_pre, 1))
+    cox_keys = jax.random.split(ks[1], cfg.num_coattn_layers)
+    coy_keys = jax.random.split(ks[2], cfg.num_coattn_layers)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "text_embed": L.embed_init(ks[3], cfg, dim=cfg.d_model_y),
+        "text_pos": L.dense_init(ks[4], (cfg.seq_y or 4096, cfg.d_model_y),
+                                 dt, scale=0.01),
+        "vis_proj": L.dense_init(ks[5], (cfg.d_model, cfg.d_model), dt),
+        "text_pre": jax.vmap(lambda k: _text_layer_init(k, cfg))(pre_keys),
+        "co_x": jax.vmap(lambda k: _stream_block_init(
+            k, cfg, cfg.d_model, cfg.d_model_y, cfg.num_heads,
+            cfg.d_ff))(cox_keys),
+        "co_y": jax.vmap(lambda k: _stream_block_init(
+            k, cfg, cfg.d_model_y, cfg.d_model, cfg.num_heads_y,
+            cfg.d_ff_y))(coy_keys),
+        "pool_x": L.dense_init(ks[6], (cfg.d_model, cfg.d_model), dt),
+        "pool_y": L.dense_init(ks[7], (cfg.d_model_y, cfg.d_model), dt),
+        "vqa_head": L.dense_init(jax.random.fold_in(key, 99),
+                                 (cfg.d_model, 3129), dt),  # VQA v2 answers
+    }
+
+
+def _self_attn(p: Params, cfg: ModelConfig, x: jax.Array, heads: int,
+               mode: ExecutionMode, use_pallas: bool) -> jax.Array:
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"].astype(x.dtype))
+    out = ops.attention_by_mode(mode, q, x, p["wk"], p["wv"], causal=False,
+                                use_pallas=use_pallas)
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _co_attn(p: Params, cfg: ModelConfig, x_own: jax.Array,
+             x_other: jax.Array, mode: ExecutionMode,
+             use_pallas: bool) -> jax.Array:
+    """Q from own stream; K/V generated from the *other* modality — the
+    mixed-stationary cross-forwarding target (paper Fig. 4a)."""
+    q = jnp.einsum("bsd,dhe->bhse", x_own, p["wq"].astype(x_own.dtype))
+    out = ops.attention_by_mode(mode, q, x_other, p["wk"], p["wv"],
+                                causal=False, use_pallas=use_pallas)
+    return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x_own.dtype))
+
+
+def _stream_block(p: Params, cfg: ModelConfig, x_own: jax.Array,
+                  x_other: jax.Array, heads: int, mode: ExecutionMode,
+                  use_pallas: bool) -> jax.Array:
+    h = L.layer_norm(p["ln_co"], x_own, eps=cfg.norm_eps)
+    ho = L.layer_norm(p["ln_co"], x_other, eps=cfg.norm_eps) \
+        if x_other.shape[-1] == x_own.shape[-1] else x_other
+    x_own = x_own + _co_attn(p["co_attn"], cfg, h, ho, mode, use_pallas)
+    h2 = L.layer_norm(p["ln_self"], x_own, eps=cfg.norm_eps)
+    x_own = x_own + _self_attn(p["self_attn"], cfg, h2, heads, mode,
+                               use_pallas)
+    h3 = L.layer_norm(p["ln_ff"], x_own, eps=cfg.norm_eps)
+    return x_own + L.mlp_forward(p["mlp"], cfg, h3, use_pallas=use_pallas)
+
+
+def _dtpu_cross_scores(px: Params, x: jax.Array, y: jax.Array,
+                       stride: int = 8) -> jax.Array:
+    """Rank Y tokens by attention mass from X queries (DTPU scoring pass)."""
+    q = jnp.einsum("bsd,dhe->bhse", x, px["co_attn"]["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bhse", y, px["co_attn"]["wk"].astype(y.dtype))
+    return P.attention_column_scores(q, k, causal=False,
+                                     sample_stride=stride)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            mode: Optional[ExecutionMode] = None, use_pallas: bool = False,
+            remat: bool = False,
+            return_token_counts: bool = False):
+    """batch: {"regions": (B, S_x, D_x) stub vision embeds,
+               "tokens": (B, S_y) text ids}.
+    Returns VQA logits (B, 3129) (+ per-block kept-token counts)."""
+    mode = mode or cfg.execution_mode
+    x = jnp.dot(batch["regions"].astype(jnp.dtype(cfg.dtype)),
+                params["vis_proj"].astype(jnp.dtype(cfg.dtype)))
+    y = L.embed_lookup(params["text_embed"], batch["tokens"])
+    y = y + params["text_pos"][:y.shape[1]].astype(y.dtype)[None]
+
+    n_pre = cfg.num_layers - cfg.num_coattn_layers
+
+    def pre_body(carry, lp):
+        h = L.layer_norm(lp["ln1"], carry, eps=cfg.norm_eps)
+        c = carry + _self_attn(lp["attn"], cfg, h, cfg.num_heads_y, mode,
+                               use_pallas)
+        h2 = L.layer_norm(lp["ln2"], c, eps=cfg.norm_eps)
+        return c + L.mlp_forward(lp["mlp"], cfg, h2, use_pallas=use_pallas)
+
+    def pre_step(carry, lp):
+        fn = jax.checkpoint(pre_body) if remat else pre_body
+        return fn(carry, lp), None
+
+    if n_pre > 0:
+        y, _ = maybe_scan(pre_step, y, params["text_pre"])
+
+    # Co-TRM blocks with DTPU pruning between blocks (static keep plan).
+    nx, ny = x.shape[1], y.shape[1]
+    plan_x = P.keep_plan(cfg.pruning, cfg.num_coattn_layers, nx) \
+        if cfg.pruning.enabled else (nx,) * cfg.num_coattn_layers
+    plan_y = P.keep_plan(cfg.pruning, cfg.num_coattn_layers, ny) \
+        if cfg.pruning.enabled else (ny,) * cfg.num_coattn_layers
+
+    counts = []
+    for i in range(cfg.num_coattn_layers):
+        px = jax.tree.map(lambda a: a[i], params["co_x"])
+        py = jax.tree.map(lambda a: a[i], params["co_y"])
+        if cfg.pruning.enabled and plan_x[i] < x.shape[1]:
+            sx = _dtpu_cross_scores(py, y, x)     # X tokens scored by Y
+            x, _, _ = P.prune_stream(x, sx, plan_x[i])
+        if cfg.pruning.enabled and plan_y[i] < y.shape[1]:
+            sy = _dtpu_cross_scores(px, x, y)     # Y tokens scored by X
+            y, _, _ = P.prune_stream(y, sy, plan_y[i])
+        counts.append((x.shape[1], y.shape[1]))
+
+        def co_body(x_, y_, px_=px, py_=py):
+            x_new = _stream_block(px_, cfg, x_, y_, cfg.num_heads, mode,
+                                  use_pallas)
+            y_new = _stream_block(py_, cfg, y_, x_, cfg.num_heads_y, mode,
+                                  use_pallas)
+            return x_new, y_new
+
+        fn = jax.checkpoint(co_body) if remat else co_body
+        x, y = fn(x, y)
+
+    hx = jnp.tanh(jnp.dot(x.mean(axis=1), params["pool_x"].astype(x.dtype)))
+    hy = jnp.tanh(jnp.dot(y.mean(axis=1), params["pool_y"].astype(y.dtype)))
+    logits = jnp.dot(hx * hy, params["vqa_head"].astype(hx.dtype))
+    logits = logits.astype(jnp.float32)
+    if return_token_counts:
+        return logits, tuple(counts)
+    return logits
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            mode: Optional[ExecutionMode] = None, use_pallas: bool = False,
+            remat: bool = False) -> jax.Array:
+    logits = forward(params, cfg, batch, mode=mode, use_pallas=use_pallas,
+                     remat=remat)
+    labels = batch["answers"]                    # (B,) int
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

@@ -1,0 +1,206 @@
+"""Fault-tolerant checkpointing (deliverable: checkpoint/restart, elastic).
+
+Design (multihost-aware, no external deps):
+
+* **Shard-wise**: each host writes only the param/optimizer shards it owns
+  (``addressable_shards``) into ``step_<N>/shard_<host>.npz``; a JSON
+  manifest records the global tree structure, shapes, and step metadata.
+* **Atomic**: writes go to ``step_<N>.tmp/`` and are renamed only after the
+  manifest fsyncs — a failure mid-write never corrupts the latest complete
+  checkpoint (restart scans for the highest complete step).
+* **Async**: ``save_async`` snapshots device arrays to host memory on the
+  training thread (cheap device->host copy), then serializes on a
+  background thread — the step loop never blocks on disk (straggler
+  mitigation: slow disks don't stall the synchronous SPMD step).
+* **Elastic restore**: ``restore`` reads the manifest + all shard files and
+  ``jax.device_put``s to the *current* mesh's shardings — a checkpoint
+  taken on 512 chips restores onto 256 (or 8) without conversion, enabling
+  elastic up/down-scaling and CPU-host debugging of TPU checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "|"          # path separator inside npz keys ('/' is not npz-safe)
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            elif hasattr(k, "name"):
+                parts.append(str(k.name))
+            else:
+                parts.append(str(k))
+        out.append((_SEP.join(parts), leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 host_id: Optional[int] = None):
+        self.dir = directory
+        self.keep = keep
+        self.host_id = host_id if host_id is not None else jax.process_index()
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------ save ------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        """Snapshot to host, then write (async unless blocking)."""
+        self.wait()                      # one in-flight save at a time
+        host_leaves = []
+        for path, leaf in _flatten(tree):
+            if hasattr(leaf, "addressable_shards"):
+                shards = [(list(s.index.__reduce__()[1][0])
+                           if False else _index_desc(s.index), np.asarray(s.data))
+                          for s in leaf.addressable_shards
+                          if s.replica_id == 0]
+                host_leaves.append((path, tuple(leaf.shape), str(leaf.dtype),
+                                    shards))
+            else:
+                arr = np.asarray(leaf)
+                host_leaves.append((path, tuple(arr.shape), str(arr.dtype),
+                                    [(_index_desc(None), arr)]))
+
+        if blocking:
+            self._write(step, host_leaves)
+        else:
+            self._thread = threading.Thread(
+                target=self._write_guard, args=(step, host_leaves),
+                daemon=True)
+            self._thread.start()
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.save(step, tree, blocking=False)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write_guard(self, step: int, host_leaves) -> None:
+        try:
+            self._write(step, host_leaves)
+        except BaseException as e:  # noqa: BLE001
+            self._error = e
+
+    def _write(self, step: int, host_leaves) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {}
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for path, shape, dtype, shards in host_leaves:
+            for i, (idx_desc, arr) in enumerate(shards):
+                arrays[f"{path}{_SEP}#{i}"] = arr
+            manifest["leaves"].append({
+                "path": path, "shape": list(shape), "dtype": dtype,
+                "shards": [{"key": f"{path}{_SEP}#{i}", "index": idx}
+                           for i, (idx, _) in enumerate(shards)],
+            })
+        np.savez(os.path.join(tmp, f"shard_{self.host_id:05d}.npz"),
+                 **arrays)
+        with open(os.path.join(tmp, f"manifest_{self.host_id:05d}.json"),
+                  "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ----------------------------- restore ----------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Rebuild the tree; device_put to ``shardings`` (the *current*
+        mesh's) if given — elastic resharding happens here."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        manifests = sorted(f for f in os.listdir(d)
+                           if f.startswith("manifest_"))
+        leaves_meta: Dict[str, dict] = {}
+        for mf in manifests:
+            with open(os.path.join(d, mf)) as f:
+                m = json.load(f)
+            for leaf in m["leaves"]:
+                leaves_meta.setdefault(leaf["path"], leaf)
+        arrays: Dict[str, np.ndarray] = {}
+        for fn in sorted(os.listdir(d)):
+            if fn.startswith("shard_") and fn.endswith(".npz"):
+                with np.load(os.path.join(d, fn)) as z:
+                    for k in z.files:
+                        arrays[k] = z[k]
+
+        flat_target = _flatten(target_tree)
+        shard_flat = _flatten(shardings) if shardings is not None else None
+        rebuilt = []
+        for i, (path, ref) in enumerate(flat_target):
+            meta = leaves_meta.get(path)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {path!r}")
+            full = np.zeros(meta["shape"], dtype=np.dtype(meta["dtype"]))
+            for sh in meta["shards"]:
+                arr = arrays[sh["key"]]
+                idx = _desc_to_index(sh["index"], meta["shape"])
+                full[idx] = arr
+            if shard_flat is not None:
+                rebuilt.append(jax.device_put(full, shard_flat[i][1]))
+            else:
+                rebuilt.append(jax.numpy.asarray(full))
+        treedef = jax.tree_util.tree_structure(target_tree)
+        return jax.tree_util.tree_unflatten(treedef, rebuilt)
+
+
+def _index_desc(index) -> Any:
+    """Serialize a tuple-of-slices shard index to JSON-able form."""
+    if index is None:
+        return None
+    out = []
+    for s in index:
+        out.append([s.start, s.stop, s.step])
+    return out
+
+
+def _desc_to_index(desc, shape) -> Any:
+    if desc is None:
+        return tuple(slice(None) for _ in shape)
+    return tuple(slice(a, b, c) for a, b, c in desc)

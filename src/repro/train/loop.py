@@ -1,0 +1,105 @@
+"""Training loop: sharded step, deterministic resumable data, async
+checkpointing, crash recovery, metrics.
+
+Fault-tolerance contract (DESIGN.md §5):
+* restart resumes from the latest *complete* checkpoint (atomic rename)
+* the data stream is a pure function of (seed, step) — exact resume
+* checkpoint writes are async (off the critical path)
+* restore accepts a different device count (elastic)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.types import ExecutionMode, ModelConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.train import optimizer as OPT
+from repro.train import steps as ST
+from repro.train.checkpoint import Checkpointer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+    microbatches: int = 1
+    mode: Optional[ExecutionMode] = None
+    use_pallas: bool = False
+    opt: OPT.OptimizerConfig = dataclasses.field(
+        default_factory=OPT.OptimizerConfig)
+
+
+def train(cfg: ModelConfig, shape: ShapeConfig, source, mesh,
+          tcfg: TrainConfig, *, hooks: Optional[Dict[str, Callable]] = None
+          ) -> Dict[str, Any]:
+    """Run the loop; returns final metrics + state handles."""
+    hooks = hooks or {}
+    mod = registry.model_module(cfg)
+
+    pspecs = registry.param_specs(cfg)
+    pshard = SH.param_shardings(pspecs, cfg, mesh)
+    bshard = SH.batch_shardings(registry.input_specs(cfg, shape), mesh)
+
+    ckpt = Checkpointer(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
+    start_step = 0
+    from jax.sharding import NamedSharding, PartitionSpec
+    replicated = NamedSharding(mesh, PartitionSpec())
+    oshard = OPT.OptState(step=replicated, mu=pshard, nu=pshard)
+
+    init_fn = jax.jit(lambda k: mod.init(k, cfg), out_shardings=pshard)
+    params = init_fn(jax.random.PRNGKey(tcfg.seed))
+    opt_state = jax.jit(OPT.init, out_shardings=oshard)(params)
+
+    if ckpt is not None:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            state = ckpt.restore(latest, {"params": params, "opt": opt_state},
+                                 {"params": pshard, "opt": oshard})
+            params, opt_state = state["params"], state["opt"]
+            start_step = latest
+
+    step_fn = jax.jit(
+        ST.make_train_step(cfg, tcfg.opt, mode=tcfg.mode,
+                           use_pallas=tcfg.use_pallas,
+                           microbatches=tcfg.microbatches),
+        in_shardings=(pshard, oshard, bshard),
+        donate_argnums=(0, 1))
+
+    metrics_hist = []
+    t_last = time.time()
+    for step in range(start_step, tcfg.steps):
+        batch = jax.tree.map(jax.numpy.asarray, source.batch(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t_last
+            m["steps_per_s"] = tcfg.log_every / max(dt, 1e-9)
+            t_last = time.time()
+            m["step"] = step + 1
+            metrics_hist.append(m)
+            if "on_log" in hooks:
+                hooks["on_log"](m)
+        if ckpt is not None and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save_async(step + 1, {"params": params,
+                                       "opt": opt_state})
+    if ckpt is not None:
+        ckpt.wait()
+    return {"params": params, "opt_state": opt_state,
+            "metrics": metrics_hist}
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

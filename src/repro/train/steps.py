@@ -1,0 +1,98 @@
+"""Step-function factories: train_step / prefill_step / serve_step for any
+registered architecture.  These are what launch/dryrun.py lowers and what
+launch/train.py runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.types import ExecutionMode, ModelConfig
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, ocfg: Optional[opt.OptimizerConfig] = None,
+                    *, mode: Optional[ExecutionMode] = None,
+                    use_pallas: bool = False, remat: bool = True,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatches > 1`` scans gradient accumulation over the
+    leading batch dim (compute/comm overlap lever: the per-microbatch grads
+    reduce while the next microbatch computes under XLA's scheduler)."""
+    ocfg = ocfg or opt.OptimizerConfig()
+    mod = registry.model_module(cfg)
+    loss_fn = functools.partial(mod.loss_fn, cfg=cfg, mode=mode,
+                                use_pallas=use_pallas, remat=remat)
+
+    def single_grads(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch=batch))(params)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                if x.ndim >= 2 and x.shape[0] == 3:    # vlm positions (3,B,S)
+                    return jnp.moveaxis(
+                        x.reshape(3, microbatches, -1, *x.shape[2:]), 1, 0)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb_batch):
+                loss_sum, gacc = carry
+                loss, grads = single_grads(params, mb_batch)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (loss_sum + loss, gacc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_step,
+                                                (jnp.zeros(()), zeros), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = single_grads(params, batch)
+        params, opt_state, metrics = opt.apply(ocfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, *,
+                      mode: Optional[ExecutionMode] = None,
+                      use_pallas: bool = False):
+    mod = registry.model_module(cfg)
+
+    def prefill_step(params, batch):
+        return mod.prefill(params, cfg, batch, max_len, mode=mode,
+                           use_pallas=use_pallas)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, tokens (B,1)) -> (logits, cache)."""
+    mod = registry.model_module(cfg)
+
+    def serve_step(params, cache, tokens):
+        return mod.decode_step(params, cfg, cache, tokens)
+
+    return serve_step
+
+
+def make_forward_step(cfg: ModelConfig, *,
+                      mode: Optional[ExecutionMode] = None,
+                      use_pallas: bool = False):
+    mod = registry.model_module(cfg)
+
+    def forward_step(params, batch):
+        return mod.forward(params, cfg, batch, mode=mode,
+                           use_pallas=use_pallas)
+
+    return forward_step

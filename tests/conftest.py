@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (the dry-run, and only the dry-run,
+# forces 512 host devices — launch/dryrun.py sets XLA_FLAGS first).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rngs():
+    return jax.random.split(jax.random.PRNGKey(0), 16)

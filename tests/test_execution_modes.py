@@ -1,0 +1,70 @@
+"""The paper's core claim carrier: the three execution systems (NON_STREAM /
+LAYER_STREAM / TILE_STREAM) are numerically equivalent — they differ only in
+dataflow/fusion.  Plus the mode-selection (TBR reconfiguration analogue) and
+HBM-traffic model sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streaming
+from repro.core.types import ExecutionMode, ModelConfig, Family
+from repro.kernels import ops, ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(3), 8)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("mode", list(ExecutionMode))
+def test_modes_equivalent(mode, use_pallas):
+    if mode == ExecutionMode.NON_STREAM and use_pallas:
+        pytest.skip("NON_STREAM is the unfused jnp baseline by definition")
+    B, Hq, Hkv, Sq, Sk, hd, D = 2, 4, 2, 200, 300, 64, 192
+    q = jax.random.normal(KEYS[0], (B, Hq, Sq, hd)) * 0.5
+    x_kv = jax.random.normal(KEYS[1], (B, Sk, D)) * 0.5
+    wk = jax.random.normal(KEYS[2], (D, Hkv, hd)) * (D ** -0.5)
+    wv = jax.random.normal(KEYS[3], (D, Hkv, hd)) * (D ** -0.5)
+    sin, cos = ref.rope_tables(Sk, hd)
+    base = ops.attention_by_mode(ExecutionMode.NON_STREAM, q, x_kv, wk, wv,
+                                 sin=sin, cos=cos, causal=True,
+                                 q_offset=Sk - Sq)
+    out = ops.attention_by_mode(mode, q, x_kv, wk, wv, sin=sin, cos=cos,
+                                causal=True, q_offset=Sk - Sq,
+                                use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_mode_selection_mha_fuses():
+    """MHA (paper's ViLBERT case): 2·Hkv·hd = 2D >= D -> TILE_STREAM."""
+    assert streaming.tile_stream_profitable(1024, 8, 128)
+
+
+def test_mode_selection_gqa_falls_back():
+    """Aggressive GQA (qwen3: 2*8*128=2048 < 5120) -> LAYER_STREAM."""
+    assert not streaming.tile_stream_profitable(5120, 8, 128)
+    cfg = ModelConfig(name="t", family=Family.DENSE, num_layers=1,
+                      d_model=5120, num_heads=64, num_kv_heads=8,
+                      d_ff=1, vocab_size=8, head_dim=128)
+    assert streaming.choose_mode(cfg) == ExecutionMode.LAYER_STREAM
+
+
+def test_traffic_model_ordering():
+    """For the paper's MHA workload the analytic HBM traffic must order
+    TILE_STREAM < LAYER_STREAM < NON_STREAM (this is Fig. 6's mechanism)."""
+    kw = dict(seq_q=4096, seq_kv=4096, d_model=1024, num_heads=8,
+              num_kv_heads=8, head_dim=128)
+    t = {m: streaming.streamed_bytes_per_layer(mode=m, **kw)
+         for m in ExecutionMode}
+    assert t[ExecutionMode.TILE_STREAM] < t[ExecutionMode.LAYER_STREAM] \
+        < t[ExecutionMode.NON_STREAM]
+
+
+def test_traffic_model_gqa_inversion():
+    """For aggressive GQA the generation-fusion is traffic-negative — the
+    honest finding that drives the adaptive mode selector (DESIGN.md §2)."""
+    kw = dict(seq_q=4096, seq_kv=4096, d_model=5120, num_heads=64,
+              num_kv_heads=8, head_dim=128)
+    t = {m: streaming.streamed_bytes_per_layer(mode=m, **kw)
+         for m in ExecutionMode}
+    assert t[ExecutionMode.LAYER_STREAM] < t[ExecutionMode.TILE_STREAM]

@@ -1,0 +1,235 @@
+"""Per-kernel validation: Pallas (interpret=True) and blocked-jnp paths vs
+the pure-jnp oracles in kernels/ref.py, swept over shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import jnp_blocked as JB
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.stream_attention import stream_attention
+from repro.kernels.tile_gemm import tile_gemm
+
+KEYS = jax.random.split(jax.random.PRNGKey(7), 12)
+
+
+def _mk_attn(B, Hq, Hkv, Sq, Sk, hd, dtype=jnp.float32, D=None):
+    q = jax.random.normal(KEYS[0], (B, Hq, Sq, hd), dtype) * 0.5
+    k = jax.random.normal(KEYS[1], (B, Hkv, Sk, hd), dtype) * 0.5
+    v = jax.random.normal(KEYS[2], (B, Hkv, Sk, hd), dtype) * 0.5
+    out = [q, k, v]
+    if D is not None:
+        out.append(jax.random.normal(KEYS[3], (B, Sk, D), dtype) * 0.5)
+        out.append(jax.random.normal(KEYS[4], (D, Hkv, hd), dtype)
+                   * (D ** -0.5))
+        out.append(jax.random.normal(KEYS[5], (D, Hkv, hd), dtype)
+                   * (D ** -0.5))
+    return out
+
+
+FLASH_CASES = [
+    # B, Hq, Hkv, Sq, Sk, hd, causal, window
+    (1, 4, 4, 128, 128, 128, False, 0),          # MHA square
+    (2, 8, 2, 256, 256, 128, True, 0),           # GQA causal
+    (1, 4, 2, 128, 384, 128, True, 0),           # causal w/ offset KV
+    (2, 4, 4, 128, 256, 128, True, 100),         # sliding window
+    (1, 2, 1, 256, 256, 128, False, 0),          # MQA
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_kernel_interpret(case):
+    B, Hq, Hkv, Sq, Sk, hd, causal, window = case
+    q, k, v = _mk_attn(B, Hq, Hkv, Sq, Sk, hd)
+    off = Sk - Sq if causal else 0
+    o = flash_attention(q, k, v, causal=causal, window=window, q_offset=off,
+                        block_q=128, block_k=128, interpret=True)
+    o_ref = ref.ref_attention(q, k, v, causal=causal, window=window,
+                              q_offset=off)
+    np.testing.assert_allclose(o, o_ref, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_dtypes(dtype):
+    q, k, v = _mk_attn(1, 4, 2, 128, 128, 128, dtype)
+    o = flash_attention(q, k, v, causal=True, interpret=True,
+                        block_q=128, block_k=128)
+    o_ref = ref.ref_attention(q, k, v, causal=True)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               o_ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+STREAM_CASES = [
+    # B, Hq, Hkv, Sq, Sk, hd, D, causal, window, rope, knorm
+    (1, 4, 4, 128, 128, 128, 256, False, 0, False, False),   # cross-attn MHA
+    (2, 8, 2, 128, 256, 128, 256, True, 0, True, False),     # GQA LM
+    (1, 4, 2, 128, 128, 128, 384, True, 0, True, True),      # qwen3-style
+    (1, 4, 2, 128, 256, 128, 256, True, 96, True, False),    # SWA
+]
+
+
+@pytest.mark.parametrize("case", STREAM_CASES)
+def test_stream_kernel_interpret(case):
+    B, Hq, Hkv, Sq, Sk, hd, D, causal, window, rope, knorm = case
+    q, k, v, x_kv, wk, wv = _mk_attn(B, Hq, Hkv, Sq, Sk, hd, D=D)
+    sin = cos = kg = None
+    if rope:
+        sin, cos = ref.rope_tables(Sk, hd)
+    if knorm:
+        kg = jax.random.normal(KEYS[6], (hd,)) * 0.1 + 1.0
+    off = Sk - Sq if causal else 0
+    o = stream_attention(q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=kg,
+                         causal=causal, window=window, q_offset=off,
+                         block_q=128, block_k=128, interpret=True)
+    o_ref = ref.ref_stream_attention(q, x_kv, wk, wv, sin=sin, cos=cos,
+                                     k_gamma=kg, causal=causal,
+                                     window=window, q_offset=off)
+    np.testing.assert_allclose(o, o_ref, atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stream_kernel_dtypes(dtype):
+    q, k, v, x_kv, wk, wv = _mk_attn(1, 4, 2, 128, 128, 128, dtype, D=256)
+    sin, cos = ref.rope_tables(128, 128)
+    o = stream_attention(q, x_kv, wk, wv, sin=sin, cos=cos, causal=True,
+                         block_q=128, block_k=128, interpret=True)
+    o_ref = ref.ref_stream_attention(q, x_kv, wk, wv, sin=sin, cos=cos,
+                                     causal=True)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               o_ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", [(256, 128, 192), (512, 384, 256),
+                                   (128, 256, 128)])
+def test_tile_gemm_interpret(shape):
+    M, K, N = shape
+    x = jax.random.normal(KEYS[0], (M, K))
+    w = jax.random.normal(KEYS[1], (K, N))
+    o = tile_gemm(x, w, block_m=128, block_n=128, block_k=128,
+                  interpret=True)
+    np.testing.assert_allclose(o, ref.ref_tile_gemm(x, w), atol=1e-3,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("case", [(1, 128, 2, 32, 16, 64),
+                                  (2, 256, 4, 64, 32, 64),
+                                  (1, 200, 3, 16, 8, 64)])
+def test_ssd_kernel_interpret(case):
+    B, S, H, P, N, chunk = case
+    x = jax.random.normal(KEYS[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(KEYS[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(KEYS[2], (H,)) * 0.5)
+    b = jax.random.normal(KEYS[3], (B, S, N)) * 0.3
+    c = jax.random.normal(KEYS[4], (B, S, N)) * 0.3
+    Sp = -(-S // chunk) * chunk
+    xp = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+    bp = jnp.pad(b, ((0, 0), (0, Sp - S), (0, 0)))
+    cp = jnp.pad(c, ((0, 0), (0, Sp - S), (0, 0)))
+    y, st = ssd_scan(xp, dtp, a, bp, cp, chunk=chunk, seq_len=S,
+                     interpret=True)
+    y_ref, st_ref = ref.ref_ssd(x, dt, a, b, c, return_final_state=True)
+    np.testing.assert_allclose(y[:, :S], y_ref, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(st, st_ref, atol=2e-3, rtol=2e-3)
+
+
+# ---------------- blocked-jnp (lowerable) paths vs oracle ----------------
+
+@pytest.mark.parametrize("unroll", [False, True])
+def test_blocked_flash_matches_ref(unroll):
+    q, k, v = _mk_attn(2, 4, 2, 100, 200, 32)
+    o = JB.flash_attention_jnp(q, k, v, causal=True, window=50,
+                               q_offset=100, block_k=64, unroll=unroll)
+    o_ref = ref.ref_attention(q, k, v, causal=True, window=50, q_offset=100)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("unroll", [False, True])
+def test_blocked_stream_matches_ref(unroll):
+    q, k, v, x_kv, wk, wv = _mk_attn(2, 4, 2, 100, 200, 32, D=96)
+    sin, cos = ref.rope_tables(200, 32)
+    kg = jax.random.normal(KEYS[6], (32,)) * 0.1 + 1.0
+    o = JB.stream_attention_jnp(q, x_kv, wk, wv, sin=sin, cos=cos,
+                                k_gamma=kg, causal=True, q_offset=100,
+                                block_k=64, unroll=unroll)
+    o_ref = ref.ref_stream_attention(q, x_kv, wk, wv, sin=sin, cos=cos,
+                                     k_gamma=kg, causal=True, q_offset=100)
+    np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=3e-5)
+
+
+def test_blocked_ssd_matches_ref():
+    B, S, H, P, N = 2, 130, 3, 16, 8
+    x = jax.random.normal(KEYS[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(KEYS[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(KEYS[2], (H,)) * 0.5)
+    b = jax.random.normal(KEYS[3], (B, S, N)) * 0.3
+    c = jax.random.normal(KEYS[4], (B, S, N)) * 0.3
+    y, st = JB.ssd_chunked_jnp(x, dt, a, b, c, chunk=32)
+    y_ref, st_ref = ref.ref_ssd(x, dt, a, b, c, return_final_state=True)
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(st, st_ref, atol=1e-3, rtol=1e-3)
+
+
+# -------------- memory-efficient VJP gradients vs oracle grads -----------
+
+def test_flash_vjp_grads_match_ref():
+    q, k, v = _mk_attn(2, 4, 2, 64, 128, 32)
+
+    def f_me(q, k, v):
+        return jnp.sum(JB.flash_attention_jnp(
+            q, k, v, causal=True, q_offset=64, block_k=64) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.ref_attention(
+            q, k, v, causal=True, q_offset=64) ** 2)
+
+    g1 = jax.grad(f_me, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_stream_vjp_grads_match_ref():
+    q, k, v, x_kv, wk, wv = _mk_attn(2, 4, 2, 64, 128, 32, D=96)
+    sin, cos = ref.rope_tables(128, 32)
+    kg = jax.random.normal(KEYS[6], (32,)) * 0.1 + 1.0
+
+    def f_me(q, x, wk_, wv_, g):
+        return jnp.sum(JB.stream_attention_jnp(
+            q, x, wk_, wv_, sin=sin, cos=cos, k_gamma=g, causal=True,
+            q_offset=64, block_k=64) ** 2)
+
+    def f_ref(q, x, wk_, wv_, g):
+        return jnp.sum(ref.ref_stream_attention(
+            q, x, wk_, wv_, sin=sin, cos=cos, k_gamma=g, causal=True,
+            q_offset=64) ** 2)
+
+    g1 = jax.grad(f_me, argnums=(0, 1, 2, 3, 4))(q, x_kv, wk, wv, kg)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2, 3, 4))(q, x_kv, wk, wv, kg)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-4)
+
+
+def test_vjp_survives_checkpoint_scan():
+    """Regression: per-call custom_vjp closures leaked tracers under
+    checkpoint+scan (module-level nondiff_argnums form required)."""
+    def layer(x, w):
+        q = jnp.einsum("bsd,dhe->bhse", x, w)
+        o = JB.flash_attention_jnp(q, q, q, causal=True, block_k=32)
+        return x + jnp.einsum("bhse,dhe->bsd", o, w)
+
+    def f(x, ws):
+        def step(c, w):
+            return jax.checkpoint(layer)(c, w), None
+        y, _ = jax.lax.scan(step, x, ws)
+        return jnp.sum(y ** 2)
+
+    x = jax.random.normal(KEYS[0], (1, 64, 16))
+    ws = jax.random.normal(KEYS[1], (2, 16, 2, 8)) * 0.1
+    g = jax.jit(jax.grad(f))(x, ws)
+    assert g.shape == x.shape
+    assert bool(jnp.isfinite(g).all())

@@ -1,0 +1,44 @@
+"""int8 projection path (the paper's INT16-CIM precision knob)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import runtime
+from repro.kernels import ops
+from repro.kernels.quant import int8_matmul, quantize_cols, quantize_rows
+
+KEYS = jax.random.split(jax.random.PRNGKey(21), 4)
+
+
+def test_int8_matmul_close_to_f32():
+    x = jax.random.normal(KEYS[0], (64, 128)) * 0.5
+    w = jax.random.normal(KEYS[1], (128, 96)) * 0.1
+    ref = x @ w
+    q = int8_matmul(x, w)
+    err = jnp.abs(q - ref).max() / (jnp.abs(ref).max() + 1e-9)
+    assert float(err) < 0.03, float(err)
+
+
+def test_projection_flag_routes_int8():
+    x = jax.random.normal(KEYS[2], (4, 32, 64)) * 0.5
+    w = jax.random.normal(KEYS[3], (64, 48)) * 0.1
+    base = ops.projection(x, w)
+    with runtime.flags(quantize_proj=True):
+        q = ops.projection(x, w)
+    assert q.shape == base.shape
+    rel = jnp.abs(q - base).max() / (jnp.abs(base).max() + 1e-9)
+    assert 0 < float(rel) < 0.05   # differs (quantized) but close
+
+
+@given(m=st.integers(1, 32), k=st.integers(8, 64), n=st.integers(1, 32))
+@settings(max_examples=15, deadline=None)
+def test_quantize_roundtrip_bounds(m, k, n):
+    x = jax.random.normal(jax.random.PRNGKey(m * 1000 + k), (m, k))
+    q, s = quantize_rows(x)
+    deq = q.astype(jnp.float32) * s
+    assert float(jnp.abs(deq - x).max()) <= float(s.max()) / 2 + 1e-6
+    w = jax.random.normal(jax.random.PRNGKey(n), (k, n))
+    qc, sc = quantize_cols(w)
+    deqc = qc.astype(jnp.float32) * sc
+    assert float(jnp.abs(deqc - w).max()) <= float(sc.max()) / 2 + 1e-6
