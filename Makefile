@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test bench bench-sim
+
+# Tier-1 verification (ROADMAP.md).
+verify:
+	$(PYTHON) -m pytest -x -q
+
+test: verify
+
+bench:
+	$(PYTHON) benchmarks/run.py
+
+bench-sim:
+	$(PYTHON) benchmarks/run.py bench_sim

@@ -1,26 +1,54 @@
 """Benchmark harness main — one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (deliverable d)."""
+Prints ``name,us_per_call,derived`` CSV (deliverable d).
+
+Usage: ``python benchmarks/run.py [section ...]`` — with no arguments all
+sections run; otherwise only the named ones (e.g. ``run.py bench_sim``).
+"""
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
+# Allow ``python benchmarks/run.py`` (not just ``python -m benchmarks.run``
+# with PYTHONPATH=src): both the repo root and src/ must be importable.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def main(argv=None) -> None:
     from benchmarks import (bench_decode, bench_kernels, bench_pruning,
-                            bench_rewrite_overlap, bench_stream_modes,
-                            roofline)
+                            bench_rewrite_overlap, bench_sim,
+                            bench_stream_modes, roofline)
     sections = [
-        ("Fig6/Fig7 stream-mode comparison", bench_stream_modes.run),
-        ("Token pruning (paper SI claim)", bench_pruning.run),
-        ("TranCIM rewrite-latency analysis", bench_rewrite_overlap.run),
-        ("Decode regime (tile-stream latency win)", bench_decode.run),
-        ("Kernel micro-benchmarks", bench_kernels.run),
-        ("Roofline summary (from dry-run artifacts)", roofline.run),
+        ("bench_stream_modes", "Fig6/Fig7 stream-mode comparison",
+         bench_stream_modes.run),
+        ("bench_pruning", "Token pruning (paper SI claim)",
+         bench_pruning.run),
+        ("bench_rewrite_overlap", "TranCIM rewrite-latency analysis",
+         bench_rewrite_overlap.run),
+        ("bench_sim", "StreamDCIM simulator (three-way + SI stall)",
+         bench_sim.run),
+        ("bench_decode", "Decode regime (tile-stream latency win)",
+         bench_decode.run),
+        ("bench_kernels", "Kernel micro-benchmarks", bench_kernels.run),
+        ("roofline", "Roofline summary (from dry-run artifacts)",
+         roofline.run),
     ]
+    wanted = list(sys.argv[1:] if argv is None else argv)
+    if wanted:
+        known = {key for key, _, _ in sections}
+        unknown = [w for w in wanted if w not in known]
+        if unknown:
+            print(f"unknown section(s) {unknown}; available: {sorted(known)}",
+                  file=sys.stderr)
+            sys.exit(2)
+        sections = [s for s in sections if s[0] in wanted]
     print("name,us_per_call,derived")
     failed = 0
-    for title, fn in sections:
+    for key, title, fn in sections:
         print(f"# --- {title} ---")
         try:
             for row in fn():

@@ -1,0 +1,97 @@
+"""StreamDCIM hardware configurations — the simulator's architecture axis.
+
+``HardwareConfig`` is the accelerator-side sibling of ``ModelConfig``: where
+a ``ModelConfig`` pins one network, a ``HardwareConfig`` pins one CIM design
+point for ``repro.sim`` to execute it on (paper §II / Fig. 2).  The default
+``STREAMDCIM_BASE`` is calibrated so the §I TranCIM analysis reproduces:
+with K = 2048x512 INT8 over a 512-bit rewrite bus, serial (layer-based
+streaming) rewriting stalls ~57% of the QK^T phase.
+
+Presets are registered in ``repro.configs.registry.HW_CONFIGS`` next to
+``ARCHS``; ``benchmarks/bench_sim.py`` resolves its design points from
+there (``registry.get_hw_config``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """One tile-based streaming digital-CIM design point.
+
+    The macro array is ``num_groups`` groups of ``macros_per_group`` TBR-CIM
+    macros; each macro stores a ``macro_rows x macro_cols`` INT8 stationary
+    tile and evaluates one input vector bit-serially.  ``rewrite_bus_bits``
+    is the shared write port into the CIM sub-arrays (paper §I: 512-bit);
+    ``ping_pong`` says whether each macro has the shadow sub-array that lets
+    tile t+1 rewrite while tile t computes (paper §II-C).
+    """
+
+    name: str = "streamdcim-base"
+    # --- macro array geometry ---
+    num_groups: int = 4
+    macros_per_group: int = 16
+    macro_rows: int = 128          # stationary-operand rows (k dim)
+    macro_cols: int = 128          # stationary-operand cols (n dim / lanes)
+    # --- timing ---
+    input_bits: int = 8            # INT8 activations, bit-serial input
+    bits_per_cycle: int = 2        # dual-rail input DACless digital issue
+    drain_cycles: int = 2          # adder-tree + accumulator drain per vector
+    rewrite_bus_bits: int = 512    # CIM write-port width (paper §I)
+    # --- memories / networks (bytes per cycle) ---
+    hbm_bytes_per_cycle: int = 64  # off-chip DRAM port
+    noc_bytes_per_cycle: int = 128  # tile-based streaming network (TBSN)
+    # --- features ---
+    ping_pong: bool = True         # shadow sub-array (compute-rewrite overlap)
+    act_bytes: int = 1             # INT8 activations/scores in DMA accounting
+    # --- dataflow split: groups running weight-stationary generation vs
+    #     input-stationary attention (mixed-stationary, paper §II-B) ---
+    gen_groups: int = 2
+
+    def __post_init__(self):
+        assert 0 < self.gen_groups < self.num_groups
+
+    # ---------- derived quantities ----------
+
+    @property
+    def vector_cycles(self) -> int:
+        """Cycles for one input vector through a stationary tile set."""
+        return math.ceil(self.input_bits / self.bits_per_cycle) + self.drain_cycles
+
+    @property
+    def rewrite_bytes_per_cycle(self) -> int:
+        return self.rewrite_bus_bits // 8
+
+    @property
+    def num_macros(self) -> int:
+        return self.num_groups * self.macros_per_group
+
+    @property
+    def gen_macros(self) -> int:
+        return self.gen_groups * self.macros_per_group
+
+    @property
+    def attn_macros(self) -> int:
+        return (self.num_groups - self.gen_groups) * self.macros_per_group
+
+    @property
+    def macro_tile_bytes(self) -> int:
+        return self.macro_rows * self.macro_cols  # INT8 stationary cells
+
+
+STREAMDCIM_BASE = HardwareConfig()
+
+# Half the macro array — utilization/stall behavior under tighter capacity.
+STREAMDCIM_SMALL = dataclasses.replace(
+    STREAMDCIM_BASE, name="streamdcim-small", num_groups=2, gen_groups=1,
+    macros_per_group=8)
+
+# Wider rewrite bus: what §I's stall analysis looks like when the write
+# port is no longer the bottleneck.
+STREAMDCIM_WIDEBUS = dataclasses.replace(
+    STREAMDCIM_BASE, name="streamdcim-widebus", rewrite_bus_bits=2048)
+
+HW_PRESETS = {h.name: h for h in
+              (STREAMDCIM_BASE, STREAMDCIM_SMALL, STREAMDCIM_WIDEBUS)}

@@ -9,6 +9,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.configs.hardware import HW_PRESETS, HardwareConfig
 from repro.core.types import (AttnKind, Family, ModelConfig, ShapeConfig,
                               SHAPES)
 
@@ -35,9 +36,21 @@ ASSIGNED = [a for a in ARCHS if not a.startswith("vilbert")]
 LONG_CONTEXT_OK = {"mamba2-780m", "hymba-1.5b", "h2o-danube3-4b"}
 
 
+# CIM design points for the repro.sim simulator (same registry object as
+# repro.configs.hardware.HW_PRESETS — adding a preset updates both names).
+HW_CONFIGS: Dict[str, HardwareConfig] = HW_PRESETS
+
+# Models the simulator's workload lowering supports (the paper's §III pool).
+SIM_ARCHS = ["vilbert-base", "vilbert-large", "qwen2-vl-2b", "whisper-base"]
+
+
 def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     mod = importlib.import_module(ARCHS[arch])
     return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_hw_config(name: str) -> HardwareConfig:
+    return HW_CONFIGS[name]
 
 
 def model_module(cfg: ModelConfig):

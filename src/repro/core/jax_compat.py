@@ -1,0 +1,29 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The repo targets the modern API surface (``jax.shard_map`` with
+``check_vma``), but the pinned environment may carry jax 0.4.x where
+shard_map still lives in ``jax.experimental`` and the flag is named
+``check_rep``.  Route every shard_map call through here.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = False):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+else:                                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = False):
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` appeared after 0.4.x; psum of 1 is the
+    portable spelling inside shard_map/pmap bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat
+
 
 def ring_collective_matmul(x_shard: jax.Array, w: jax.Array, *,
                            axis: str) -> jax.Array:
@@ -30,7 +32,7 @@ def ring_collective_matmul(x_shard: jax.Array, w: jax.Array, *,
 
     Equivalent to ``all_gather(x_shard, axis) @ w`` (tests assert it).
     """
-    g = jax.lax.axis_size(axis)
+    g = jax_compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m = x_shard.shape[0]
     out = jnp.zeros((g * m, w.shape[1]), w.dtype)
@@ -57,10 +59,10 @@ def gather_matmul_overlapped(x: jax.Array, w: jax.Array, mesh, *,
     """jit-level wrapper: x (M, K) sharded on dim0 over ``axis``; w
     replicated.  Returns the full product with ring overlap."""
     fn = functools.partial(ring_collective_matmul, axis=axis)
-    return jax.shard_map(
+    return jax_compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),
-        out_specs=P(None, None), check_vma=False)(x, w)
+        out_specs=P(None, None))(x, w)
 
 
 def microbatch_overlap_note() -> str:

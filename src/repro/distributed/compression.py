@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat
+
 
 def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -55,8 +57,8 @@ def cross_pod_mean_int8(grads: Any, mesh, *, axis: str = "pod") -> Any:
             return (total / npods).astype(local.dtype)
 
         spec = P()  # grads replicated w.r.t. pod axis inside the shard_map
-        return jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
-                             check_vma=False)(g)
+        return jax_compat.shard_map(body, mesh=mesh, in_specs=spec,
+                                    out_specs=spec)(g)
 
     return jax.tree.map(exchange, grads)
 

@@ -167,14 +167,28 @@ def _flatten_with_paths(tree) -> Any:
     return [(pstr(kp), leaf) for kp, leaf in flat], treedef
 
 
+class _SimulatedMesh:
+    """Stand-in with production axis sizes for rule evaluation on a small
+    (e.g. single-device test) mesh — only ``.shape`` is consulted by the
+    rule table."""
+
+    def __init__(self, axis_sizes):
+        self.shape = dict(axis_sizes)
+
+
 def param_shardings(param_tree, cfg: ModelConfig, mesh: Mesh, *,
-                    fsdp_threshold: float = 8e9):
+                    fsdp_threshold: float = 8e9, axis_sizes=None):
     """param_tree: pytree of arrays or ShapeDtypeStructs -> NamedShardings.
 
     Layer-stacked params (leading L dim from vmap-init) get the rule applied
-    to the trailing dims with the stack dim replicated.
+    to the trailing dims with the stack dim replicated.  ``axis_sizes``
+    (name -> size) overrides the axis sizes the *rules* see, so tests can
+    check production-size divisibility while building NamedShardings on a
+    single-device mesh.
     """
-    use_fsdp = cfg.param_count() >= fsdp_threshold and _axis_size(mesh, "data") > 1
+    rule_mesh = mesh if axis_sizes is None else _SimulatedMesh(axis_sizes)
+    use_fsdp = (cfg.param_count() >= fsdp_threshold
+                and _axis_size(rule_mesh, "data") > 1)
     flat, treedef = _flatten_with_paths(param_tree)
     stacked_prefixes = ("layers", "dense_layers", "enc_layers", "dec_layers",
                         "text_pre", "co_x", "co_y")
@@ -184,10 +198,10 @@ def param_shardings(param_tree, cfg: ModelConfig, mesh: Mesh, *,
         shape = tuple(leaf.shape)
         top = path.split("/")[0]
         if top in stacked_prefixes and len(shape) >= 1:
-            inner = spec_for_param(path, shape[1:], cfg, mesh, use_fsdp)
+            inner = spec_for_param(path, shape[1:], cfg, rule_mesh, use_fsdp)
             spec = P(*((None,) + tuple(inner)))
         else:
-            spec = spec_for_param(path, shape, cfg, mesh, use_fsdp)
+            spec = spec_for_param(path, shape, cfg, rule_mesh, use_fsdp)
         specs.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, specs)
 
@@ -209,9 +223,11 @@ def batch_shardings(batch_tree, mesh: Mesh, *, seq_sharded: bool = False):
             return NamedSharding(mesh, P())
         if leaf.shape[0] == 3 and nd == 3:          # vlm positions
             return NamedSharding(mesh, P(None, baxes, None))
+        # NB: ``P(...) + tuple`` degrades to a plain tuple, which
+        # NamedSharding rejects — always build the full P in one call.
         if seq_sharded and nd >= 2:
-            return NamedSharding(mesh, P(None, baxes) + (None,) * (nd - 2))
-        return NamedSharding(mesh, P(baxes) + (None,) * (nd - 1))
+            return NamedSharding(mesh, P(None, baxes, *((None,) * (nd - 2))))
+        return NamedSharding(mesh, P(baxes, *((None,) * (nd - 1))))
 
     return jax.tree.map(spec, batch_tree)
 

@@ -1,0 +1,52 @@
+"""``repro.sim`` — cycle-approximate StreamDCIM hardware simulator.
+
+A discrete-event model of the accelerator the paper describes, turning the
+repo's analytic claims (``repro.core.streaming``) and kernel dataflows
+(``repro.kernels.stream_attention``) into checkable simulation results:
+the three-way NON_STREAM / LAYER_STREAM / TILE_STREAM comparison, the §I
+rewrite-stall arithmetic, and per-mode HBM traffic.
+
+Module map
+----------
+``macro.py``     TBR-CIM macro timing: normal vs hybrid reconfigurable
+                 modes, weight/input sub-array partitioning, bit-serial
+                 GEMM cycles, per-tile rewrite latency from the write-bus
+                 width (§II-A; calibrated against §I's TranCIM numbers).
+``dataflow.py``  The discrete-event engine (resources: GEN / ATTN / BUS /
+                 NOC / HBM / VEC) and the mixed-stationary
+                 cross-forwarding schedule: stationary-weight macros
+                 generate K/V tiles that forward over the tile-based
+                 streaming network straight into the attention macros,
+                 with tile-level execution decoupling (§II-B).
+``pipeline.py``  The ping-pong fine-grained compute-rewriting pipeline
+                 (TILE_STREAM) plus the two baseline schedulers
+                 (NON_STREAM, LAYER_STREAM) and the §I rewrite-stall
+                 micro-simulation (§II-C / §I).
+``trace.py``     Per-tile event traces; utilization, latency, DMA-byte
+                 and rewrite-stall summaries.
+``workload.py``  Lowers ``ModelConfig``s (ViLBERT-base/large co-TRM,
+                 whisper enc-dec, qwen2-vl / dense decoders) into the
+                 per-layer op graphs the schedulers execute.
+
+Hardware design points live in ``repro.configs.hardware`` and are
+registered in ``repro.configs.registry.HW_CONFIGS``.
+
+Out of scope (ROADMAP §Simulator): energy model, decode-step workloads,
+DTPU pruning interaction, multi-macro-group sweeps, Pallas-trace replay.
+"""
+from repro.configs.hardware import (HW_PRESETS, HardwareConfig,
+                                    STREAMDCIM_BASE, STREAMDCIM_SMALL,
+                                    STREAMDCIM_WIDEBUS)
+from repro.sim.macro import MacroArray, MacroMode
+from repro.sim.pipeline import (SimResult, compare_modes, simulate,
+                                simulate_model, simulate_rewrite_stall)
+from repro.sim.trace import Event, Trace
+from repro.sim.workload import AttnOp, GemmOp, Layer, Workload, build_workload
+
+__all__ = [
+    "HW_PRESETS", "HardwareConfig", "STREAMDCIM_BASE", "STREAMDCIM_SMALL",
+    "STREAMDCIM_WIDEBUS", "MacroArray", "MacroMode", "SimResult",
+    "compare_modes", "simulate", "simulate_model", "simulate_rewrite_stall",
+    "Event", "Trace", "AttnOp", "GemmOp", "Layer", "Workload",
+    "build_workload",
+]

@@ -1,0 +1,320 @@
+"""The three execution pipelines (paper §III comparison systems).
+
+All three schedulers execute the same per-(q-block, kv-tile) flash-style
+attention schedule — identical ATTN-array compute — and differ only in the
+paper's three mechanisms:
+
+* ``NON_STREAM``    — unfused: every intermediate (Q, K, V, scores,
+  probabilities, attention out) round-trips HBM, softmax runs on the
+  vector unit against spilled score tiles, CIM rewriting serializes with
+  compute, and nothing overlaps (a fully sequential accelerator).
+* ``LAYER_STREAM``  — fused projections + streaming attention, but with
+  *layer-granularity* synchronization: attention starts only after the
+  whole K/V layer is generated and spilled, K/V round-trip HBM per
+  q-block, and rewriting K/V tiles into the attention macros blocks the
+  macro array (normal mode — no shadow sub-array), reproducing the §I
+  ~57% rewrite stall.
+* ``TILE_STREAM``   — StreamDCIM: the mixed-stationary cross-forwarding
+  schedule of ``dataflow.cross_forward_attention`` with tile-level
+  decoupling and the ping-pong compute-rewriting overlap.
+
+Capacity note: the §I micro-workload (K = 2048x512) fits the macro array,
+so layer-based streaming can hold K fully resident
+(``simulate_rewrite_stall``); the §III model workloads cannot (ViLBERT
+K+V across heads need ~4x the array), so every scheduler re-streams KV
+tiles per q-block — which is why all three share the same tile schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.hardware import HardwareConfig, STREAMDCIM_BASE
+from repro.core.types import ExecutionMode, ModelConfig
+from repro.sim.dataflow import Engine, cross_forward_attention
+from repro.sim.macro import MacroArray, MacroMode, dma_cycles
+from repro.sim.trace import Trace
+from repro.sim.workload import (AttnOp, BLOCK, GemmOp, Workload,
+                                build_workload)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    workload: str
+    mode: ExecutionMode
+    hw: str
+    cycles: int
+    hbm_bytes: int
+    layer_cycles: Tuple[int, ...]
+    trace: Trace
+
+    def op_dma_bytes(self, op_name: str) -> int:
+        """Simulated HBM bytes attributed to one op (tag prefix match)."""
+        return self.trace.bytes_moved(
+            "HBM", pred=lambda e: e.tag.startswith(op_name + ":"))
+
+
+class _Scheduler:
+    """Shared structure: layers chain sequentially; ops chain within a
+    layer (the macro array is a single shared pool)."""
+
+    mode: ExecutionMode
+
+    def __init__(self, hw: HardwareConfig) -> None:
+        self.hw = hw
+        self.gen = MacroArray(hw, hw.gen_groups, MacroMode.NORMAL)
+
+    def simulate(self, wl: Workload) -> SimResult:
+        eng = Engine()
+        prev = eng.barrier([], tag="start")
+        layer_marks: List[int] = []
+        for layer in wl.layers:
+            for op in layer.ops:
+                if isinstance(op, AttnOp):
+                    prev = self.build_attn(eng, op, prev)
+                else:
+                    prev = self.build_gemm(eng, op, prev)
+            prev = eng.barrier([prev], tag=f"layer{layer.index}")
+            layer_marks.append(prev)
+        trace = eng.run()
+        finish = eng.finish_times
+        bounds = [0] + [finish[m] for m in layer_marks]
+        per_layer = tuple(b - a for a, b in zip(bounds, bounds[1:]))
+        return SimResult(wl.name, self.mode, self.hw.name, trace.makespan,
+                         trace.bytes_moved("HBM"), per_layer, trace)
+
+    # GEMMs (FFN, output projections) are weight-stationary and identical
+    # across modes; streaming modes keep their activations on-chip.
+    def build_gemm(self, eng: Engine, op: GemmOp, start: int) -> int:
+        return eng.task("compute", "GEN",
+                        self.gen.gemm_cycles(op.m, op.k, op.n), [start],
+                        tag=f"{op.name}:gemm")
+
+    def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
+        raise NotImplementedError
+
+
+class _TileStream(_Scheduler):
+    mode = ExecutionMode.TILE_STREAM
+
+    def __init__(self, hw: HardwareConfig) -> None:
+        super().__init__(hw)
+        # Hybrid reconfigurable mode: active + shadow sub-array per macro.
+        self.attn = MacroArray(hw, hw.num_groups - hw.gen_groups,
+                               MacroMode.HYBRID)
+
+    def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
+        return cross_forward_attention(eng, self.hw, op, self.gen,
+                                       self.attn, start, op.name)
+
+
+class _LayerStream(_Scheduler):
+    mode = ExecutionMode.LAYER_STREAM
+
+    def __init__(self, hw: HardwareConfig) -> None:
+        super().__init__(hw)
+        # Normal mode: both sub-arrays stationary, rewrites block compute.
+        self.attn = MacroArray(hw, hw.num_groups - hw.gen_groups,
+                               MacroMode.NORMAL)
+
+    def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
+        hw, ab = self.hw, self.hw.act_bytes
+        nqb = math.ceil(op.seq_q / BLOCK)
+        nkb = math.ceil(op.seq_kv / BLOCK)
+        q_bytes = op.seq_q * op.heads * op.head_dim * ab
+        x_bytes = op.seq_kv * op.d_kv * ab
+        kv_bytes = op.seq_kv * op.kv_width * ab
+
+        xdma = eng.task("dma", "HBM", dma_cycles(hw, x_bytes), [start],
+                        nbytes=x_bytes, tag=f"{op.name}:xdma")
+        qgen = eng.task("compute", "GEN",
+                        self.gen.gemm_cycles(op.seq_q, op.d_q,
+                                             op.heads * op.head_dim),
+                        [start], tag=f"{op.name}:qgen")
+        qdma = eng.task("dma", "HBM", dma_cycles(hw, q_bytes), [qgen],
+                        nbytes=q_bytes, tag=f"{op.name}:qdma")
+        kvgen = eng.task("compute", "GEN",
+                         2 * self.gen.gemm_cycles(
+                             op.seq_kv, op.d_kv, op.kv_heads * op.head_dim),
+                         [xdma], tag=f"{op.name}:kvgen")
+        kvw = eng.task("dma", "HBM", dma_cycles(hw, kv_bytes), [kvgen],
+                       nbytes=kv_bytes, tag=f"{op.name}:kvdma")
+        # Layer-granularity sync: attention waits for the full K/V layer.
+        barrier = eng.barrier([kvw, qdma], tag=f"{op.name}:layer_sync")
+
+        kv_tile_bytes = 2 * BLOCK * op.kv_heads * op.head_dim * ab
+        ends = []
+        for i in range(nqb):
+            prev_comp: List[int] = []
+            for j in range(nkb):
+                rd = eng.task("dma", "HBM", dma_cycles(hw, kv_tile_bytes),
+                              [barrier], nbytes=kv_tile_bytes,
+                              tag=f"{op.name}:kvdma:q{i}k{j}")
+                # No shadow sub-array: the rewrite occupies the macro array.
+                rw = eng.task("rewrite", "ATTN",
+                              self.attn.rewrite_cycles(kv_tile_bytes), [rd],
+                              tag=f"{op.name}:rw:q{i}k{j}")
+                comp = eng.task("compute", "ATTN",
+                                2 * self.attn.gemm_cycles(
+                                    BLOCK, op.head_dim, BLOCK,
+                                    count=op.heads),
+                                [rw] + prev_comp[-1:],
+                                tag=f"{op.name}:qkpv:q{i}k{j}")
+                prev_comp.append(comp)
+            ends.append(prev_comp[-1])
+        o_bytes = q_bytes
+        odma = eng.task("dma", "HBM", dma_cycles(hw, o_bytes), ends,
+                        nbytes=o_bytes, tag=f"{op.name}:odma")
+        return eng.barrier([odma], tag=f"{op.name}:done")
+
+
+class _NonStream(_Scheduler):
+    mode = ExecutionMode.NON_STREAM
+
+    def __init__(self, hw: HardwareConfig) -> None:
+        super().__init__(hw)
+        self.attn = MacroArray(hw, hw.num_groups - hw.gen_groups,
+                               MacroMode.NORMAL)
+
+    def _chain(self, eng: Engine, prev: int, kind: str, resource: str,
+               cycles: int, nbytes: int, tag: str) -> int:
+        return eng.task(kind, resource, cycles, [prev], nbytes=nbytes,
+                        tag=tag)
+
+    def build_gemm(self, eng: Engine, op: GemmOp, start: int) -> int:
+        # Unfused: activations round-trip HBM around every GEMM.  The
+        # output projection's input read is already charged to the
+        # attention op (odma read), matching the analytic model's 2*o.
+        ab = self.hw.act_bytes
+        t = start
+        if not op.name.endswith("_oproj"):
+            in_bytes = op.m * op.k * ab
+            t = self._chain(eng, t, "dma", "HBM",
+                            dma_cycles(self.hw, in_bytes), in_bytes,
+                            f"{op.name}:indma")
+        t = self._chain(eng, t, "compute", "GEN",
+                        self.gen.gemm_cycles(op.m, op.k, op.n), 0,
+                        f"{op.name}:gemm")
+        out_bytes = op.m * op.n * ab
+        return self._chain(eng, t, "dma", "HBM",
+                           dma_cycles(self.hw, out_bytes), out_bytes,
+                           f"{op.name}:outdma")
+
+    def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
+        hw, ab = self.hw, self.hw.act_bytes
+        q_bytes = op.seq_q * op.heads * op.head_dim * ab
+        k_bytes = op.seq_kv * op.kv_heads * op.head_dim * ab
+        x_bytes = op.seq_kv * op.d_kv * ab
+        a_bytes = op.heads * op.seq_q * op.seq_kv * ab
+        softmax_cycles = math.ceil(op.heads * op.seq_q * op.seq_kv
+                                   / hw.macro_cols)
+        n = op.name
+        t = self._chain(eng, start, "dma", "HBM", dma_cycles(hw, x_bytes),
+                        x_bytes, f"{n}:xdma")
+        t = self._chain(eng, t, "compute", "GEN",
+                        self.gen.gemm_cycles(op.seq_q, op.d_q,
+                                             op.heads * op.head_dim),
+                        0, f"{n}:qgen")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                        q_bytes, f"{n}:qdma")
+        t = self._chain(eng, t, "compute", "GEN",
+                        2 * self.gen.gemm_cycles(
+                            op.seq_kv, op.d_kv, op.kv_heads * op.head_dim),
+                        0, f"{n}:kvgen")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, 2 * k_bytes),
+                        2 * k_bytes, f"{n}:kvdma")                 # K,V out
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                        q_bytes, f"{n}:qdma:read")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, k_bytes),
+                        k_bytes, f"{n}:kvdma:readk")
+        t = self._chain(eng, t, "rewrite", "ATTN",
+                        self.attn.rewrite_cycles(k_bytes), 0, f"{n}:rwk")
+        t = self._chain(eng, t, "compute", "ATTN",
+                        self.attn.gemm_cycles(op.seq_q, op.head_dim,
+                                              op.seq_kv, count=op.heads),
+                        0, f"{n}:qk")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                        a_bytes, f"{n}:adma:write")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                        a_bytes, f"{n}:adma:read")
+        t = self._chain(eng, t, "compute", "VEC", softmax_cycles, 0,
+                        f"{n}:softmax")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                        a_bytes, f"{n}:adma:writep")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                        a_bytes, f"{n}:adma:readp")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, k_bytes),
+                        k_bytes, f"{n}:kvdma:readv")
+        t = self._chain(eng, t, "rewrite", "ATTN",
+                        self.attn.rewrite_cycles(k_bytes), 0, f"{n}:rwv")
+        t = self._chain(eng, t, "compute", "ATTN",
+                        self.attn.gemm_cycles(op.seq_q, op.seq_kv,
+                                              op.head_dim, count=op.heads),
+                        0, f"{n}:pv")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                        q_bytes, f"{n}:odma:write")
+        t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                        q_bytes, f"{n}:odma:read")
+        return eng.barrier([t], tag=f"{n}:done")
+
+
+_SCHEDULERS = {
+    ExecutionMode.TILE_STREAM: _TileStream,
+    ExecutionMode.LAYER_STREAM: _LayerStream,
+    ExecutionMode.NON_STREAM: _NonStream,
+}
+
+
+def simulate(wl: Workload, hw: HardwareConfig,
+             mode: ExecutionMode) -> SimResult:
+    return _SCHEDULERS[mode](hw).simulate(wl)
+
+
+def simulate_model(cfg: ModelConfig, hw: HardwareConfig = STREAMDCIM_BASE,
+                   mode: Optional[ExecutionMode] = None,
+                   seq_len: int = 0) -> SimResult:
+    return simulate(build_workload(cfg, seq_len), hw,
+                    mode or cfg.execution_mode)
+
+
+def compare_modes(cfg: ModelConfig, hw: HardwareConfig = STREAMDCIM_BASE,
+                  seq_len: int = 0) -> Dict[ExecutionMode, SimResult]:
+    wl = build_workload(cfg, seq_len)
+    return {m: simulate(wl, hw, m) for m in ExecutionMode}
+
+
+def simulate_rewrite_stall(hw: HardwareConfig = STREAMDCIM_BASE,
+                           n: int = 2048, d: int = 512, *,
+                           ping_pong: bool = False,
+                           iters: int = 4) -> Dict[str, float]:
+    """Paper §I micro-workload: QK^T phases with K = n x d INT8 resident
+    in the macro array (it fits, unlike the §III models).  Serial
+    (layer-based streaming) rewriting stalls the array; with the ping-pong
+    shadow sub-array the next phase's K rewrites during the current
+    phase's compute and only the bus-bound residue is exposed."""
+    mode = MacroMode.HYBRID if ping_pong else MacroMode.NORMAL
+    arr = MacroArray(hw, hw.num_groups, mode)
+    rw_cycles = arr.rewrite_cycles(n * d)            # INT8: n*d bytes
+    comp_cycles = arr.gemm_cycles(n, d, n)           # stream n q-vectors
+    eng = Engine()
+    comps: List[int] = []
+    for it in range(iters):
+        deps = comps[-1:] if not arr.overlap_rewrite else comps[-2:-1]
+        res = "ATTN" if not arr.overlap_rewrite else "BUS"
+        rw = eng.task("rewrite", res, rw_cycles, deps, tag=f"it{it}:rw")
+        comp = eng.task("compute", "ATTN", comp_cycles,
+                        [rw] + comps[-1:], tag=f"it{it}:qk")
+        comps.append(comp)
+    trace = eng.run()
+    span = trace.makespan
+    exposed = span - trace.busy_cycles("ATTN") if arr.overlap_rewrite else 0
+    return {
+        "rewrite_cycles": float(rw_cycles),
+        "compute_cycles": float(comp_cycles),
+        "span_cycles": float(span),
+        "cycles_per_phase": span / iters,
+        "rewrite_frac": trace.rewrite_stall_fraction(),
+        "exposed_stall_frac": (exposed / span if arr.overlap_rewrite
+                               else trace.rewrite_stall_fraction()),
+    }

@@ -1,0 +1,95 @@
+"""Per-tile event traces + utilization/latency summaries for ``repro.sim``.
+
+Every scheduled task becomes one ``Event`` with its resource, cycle
+interval, byte count (for DMA/NoC/rewrite events) and a free-form tag
+(``layer:op:tile``).  ``Trace`` aggregates the events into the numbers the
+benchmarks and tests consume: makespan, per-resource busy cycles and
+utilization, DMA bytes (optionally filtered by op class), and the rewrite
+stall fraction that reproduces the paper's §I analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    task_id: int
+    kind: str          # "compute" | "rewrite" | "dma" | "forward"
+    resource: str      # "GEN" | "ATTN" | "BUS" | "NOC" | "HBM" | ...
+    start: int
+    end: int
+    bytes: int = 0
+    tag: str = ""      # "cox0_co:xdma:q0k1" — op, kind, tile
+
+    @property
+    def cycles(self) -> int:
+        return self.end - self.start
+
+
+class Trace:
+    """Append-only event log with summary reductions."""
+
+    def __init__(self) -> None:
+        self.events: List[Event] = []
+
+    def add(self, ev: Event) -> None:
+        self.events.append(ev)
+
+    # ---------- reductions ----------
+
+    @property
+    def makespan(self) -> int:
+        return max((e.end for e in self.events), default=0)
+
+    def busy_cycles(self, resource: str) -> int:
+        return sum(e.cycles for e in self.events if e.resource == resource)
+
+    def utilization(self, resource: str) -> float:
+        span = self.makespan
+        return self.busy_cycles(resource) / span if span else 0.0
+
+    def bytes_moved(self, resource: str = "HBM",
+                    pred: Optional[Callable[[Event], bool]] = None) -> int:
+        return sum(e.bytes for e in self.events
+                   if e.resource == resource and (pred is None or pred(e)))
+
+    def dma_bytes_by_op(self) -> Dict[str, int]:
+        """HBM bytes keyed by the op field (first tag segment)."""
+        out: Dict[str, int] = defaultdict(int)
+        for e in self.events:
+            if e.resource == "HBM":
+                out[e.tag.split(":", 1)[0]] += e.bytes
+        return dict(out)
+
+    def rewrite_stall_fraction(self, compute_resource: str = "ATTN") -> float:
+        """Paper §I metric: rewrite cycles / (rewrite + compute) cycles on
+        the attention macro array.  Under serial scheduling this is the
+        stall fraction; under ping-pong it is just the overlap ratio."""
+        rw = sum(e.cycles for e in self.events if e.kind == "rewrite")
+        comp = sum(e.cycles for e in self.events
+                   if e.resource == compute_resource and e.kind == "compute")
+        return rw / (rw + comp) if rw + comp else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        resources = sorted({e.resource for e in self.events})
+        s: Dict[str, float] = {"makespan_cycles": float(self.makespan)}
+        for r in resources:
+            s[f"busy_{r}"] = float(self.busy_cycles(r))
+            s[f"util_{r}"] = self.utilization(r)
+        s["hbm_bytes"] = float(self.bytes_moved("HBM"))
+        s["rewrite_stall_frac"] = self.rewrite_stall_fraction()
+        return s
+
+    # ---------- rendering ----------
+
+    def format_events(self, limit: int = 40) -> str:
+        lines = [f"{'cycle':>10}  {'res':<5} {'kind':<8} {'bytes':>9}  tag"]
+        for e in sorted(self.events, key=lambda e: (e.start, e.resource))[:limit]:
+            lines.append(f"{e.start:>10}  {e.resource:<5} {e.kind:<8} "
+                         f"{e.bytes:>9}  {e.tag}")
+        if len(self.events) > limit:
+            lines.append(f"... ({len(self.events) - limit} more events)")
+        return "\n".join(lines)

@@ -1,0 +1,52 @@
+"""Minimal stand-in for hypothesis when it isn't installed.
+
+Tier-1 environments may lack ``hypothesis``; rather than skipping the
+property tests entirely, this shim runs each ``@given`` test over a small
+deterministic grid (lo / mid / hi per strategy).  Only the subset of the
+API these tests use is provided: ``given`` with keyword strategies,
+``settings``, ``st.integers``, ``st.floats``.
+"""
+from __future__ import annotations
+
+
+import itertools
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self._samples = samples
+
+    def samples(self):
+        return self._samples
+
+
+class st:  # noqa: N801 — mirrors ``hypothesis.strategies as st``
+    @staticmethod
+    def integers(min_value, max_value):
+        mid = (min_value + max_value) // 2
+        return _Strategy(sorted({min_value, mid, max_value}))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        mid = (min_value + max_value) / 2.0
+        return _Strategy(sorted({min_value, mid, max_value}))
+
+
+def given(**strategies):
+    names = list(strategies)
+
+    def deco(fn):
+        # No functools.wraps: pytest must see a zero-arg signature, not the
+        # original parameters (it would look for fixtures named after them).
+        def wrapper():
+            grids = [strategies[n].samples() for n in names]
+            for combo in itertools.product(*grids):
+                fn(**dict(zip(names, combo)))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(**_kwargs):
+    return lambda fn: fn

@@ -18,8 +18,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.distributed.compression import cross_pod_mean_int8
     from repro.launch import hlo_analysis as HA
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     grads = {"w": jnp.zeros((256, 256), jnp.float32),
              "b": jnp.zeros((1024,), jnp.float32)}
 

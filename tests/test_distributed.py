@@ -11,27 +11,24 @@ from repro.distributed import sharding as SH
 from repro.models import layers as L
 
 
-def _fake_mesh(shape=(4, 4), axes=("data", "model")):
-    return jax.sharding.Mesh(
-        np.array(jax.devices() * (shape[0] * shape[1]))[:shape[0] * shape[1]]
-        .reshape(shape), axes) if False else jax.make_mesh(
-            (1, 1), axes, axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# Production axis sizes, simulated for rule evaluation (the test mesh is
+# single-device; jax.sharding.AxisType does not exist on jax 0.4.x).
+PROD_SIZES = {"data": 16, "model": 16, "pod": 2}
 
 
 @pytest.mark.parametrize("arch", list(registry.ARCHS))
 def test_param_shardings_cover_every_leaf(arch):
     """Every param leaf gets a sharding whose partitioned dims divide."""
     cfg = registry.get_config(arch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
     pspecs = registry.param_specs(cfg)
-    shardings = SH.param_shardings(pspecs, cfg, mesh)
+    shardings = SH.param_shardings(pspecs, cfg, mesh,
+                                   axis_sizes=PROD_SIZES)
     flat_p = jax.tree.leaves(pspecs)
     flat_s = jax.tree.leaves(shardings, is_leaf=lambda x: isinstance(
         x, jax.sharding.NamedSharding))
     assert len(flat_p) == len(flat_s)
-    # simulate the production axis sizes for divisibility checking
-    sizes = {"data": 16, "model": 16, "pod": 2}
+    sizes = PROD_SIZES
     for p, s in zip(flat_p, flat_s):
         spec = s.spec
         for dim, ax in enumerate(spec):
@@ -45,14 +42,12 @@ def test_param_shardings_cover_every_leaf(arch):
 
 
 def test_head_sharding_rules():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
     # qwen3: 64 heads % 16 ok -> head-sharded; starcoder2: 36 heads -> not
     q3 = registry.get_config("qwen3-32b")
     sc = registry.get_config("starcoder2-7b")
 
     class M:  # mesh stub with production sizes
-        shape = {"data": 16, "model": 16}
+        shape = PROD_SIZES
     assert SH.heads_shardable(q3, M)
     assert not SH.heads_shardable(sc, M)
     assert SH.experts_shardable(registry.get_config("deepseek-v3-671b"), M)

@@ -49,6 +49,58 @@ def test_mode_selection_gqa_falls_back():
     assert streaming.choose_mode(cfg) == ExecutionMode.LAYER_STREAM
 
 
+def _cfg(**kw):
+    base = dict(name="t", family=Family.DENSE, num_layers=1, d_model=1024,
+                num_heads=8, num_kv_heads=8, d_ff=1, vocab_size=8,
+                head_dim=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_mode_selection_explicit_overrides_win():
+    """Benchmark baselines: an explicit NON_STREAM / LAYER_STREAM config is
+    honored even where tile-streaming would be profitable (MHA)."""
+    from repro.core.types import AttnKind
+    for forced in (ExecutionMode.NON_STREAM, ExecutionMode.LAYER_STREAM):
+        assert streaming.choose_mode(_cfg(execution_mode=forced)) == forced
+        # ... even for MLA, whose TILE_STREAM path otherwise always fuses.
+        assert streaming.choose_mode(
+            _cfg(execution_mode=forced, attn_kind=AttnKind.MLA)) == forced
+
+
+def test_mode_selection_mla_always_fuses():
+    """MLA latent decompression always tile-streams, regardless of the
+    GQA-style profitability arithmetic (kv_lora << d_model)."""
+    from repro.core.types import AttnKind
+    cfg = _cfg(d_model=7168, num_heads=128, num_kv_heads=128,
+               attn_kind=AttnKind.MLA, kv_lora_rank=512)
+    assert streaming.choose_mode(cfg) == ExecutionMode.TILE_STREAM
+
+
+def test_mode_selection_fusion_knob_off_falls_back():
+    """fuse_kv_generation=False disables cross-forwarding even for MHA."""
+    cfg = _cfg(fuse_kv_generation=False)
+    assert streaming.tile_stream_profitable(cfg.d_model, cfg.num_kv_heads,
+                                            cfg.head_dim)
+    assert streaming.choose_mode(cfg) == ExecutionMode.LAYER_STREAM
+
+
+def test_mode_selection_boundary_and_overrides():
+    """2*Hkv*hd == d_model is the break-even point — it still fuses (ties
+    go to tile-streaming: it additionally removes the K/V round-trip), and
+    per-layer kwargs override the config's dims (mixed-width co-attention)."""
+    assert streaming.tile_stream_profitable(1024, 4, 128)       # == break-even
+    assert not streaming.tile_stream_profitable(1025, 4, 128)   # just under
+    cfg = _cfg()                                                # MHA config
+    assert streaming.choose_mode(
+        cfg, d_model=5120, num_kv_heads=8, head_dim=128) \
+        == ExecutionMode.LAYER_STREAM
+    gqa = _cfg(d_model=5120, num_heads=64)
+    assert streaming.choose_mode(
+        gqa, d_model=1024, num_kv_heads=8, head_dim=128) \
+        == ExecutionMode.TILE_STREAM
+
+
 def test_traffic_model_ordering():
     """For the paper's MHA workload the analytic HBM traffic must order
     TILE_STREAM < LAYER_STREAM < NON_STREAM (this is Fig. 6's mechanism)."""

@@ -11,8 +11,7 @@ _SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.pipeline import gather_matmul_overlapped
 
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((4,), ("model",))
     M, K, N = 64, 32, 48
     x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
     w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
