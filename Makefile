@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-sim
+.PHONY: verify test bench bench-sim bench-sim-json
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -14,3 +14,7 @@ bench:
 
 bench-sim:
 	$(PYTHON) benchmarks/run.py bench_sim
+
+# CI smoke: machine-readable report (rows + ExecutionPlan summaries).
+bench-sim-json:
+	$(PYTHON) benchmarks/run.py bench_sim --json bench_sim.json

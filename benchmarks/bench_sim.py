@@ -2,17 +2,19 @@
 (Fig. 6) and the §I rewrite-stall analysis, produced by ``repro.sim``
 instead of the closed-form model.
 
-For every supported model the simulator executes the full per-layer op
-graph under all three schedulers and reports cycles, HBM traffic and the
-speedups of StreamDCIM (TILE_STREAM) over the non-streaming and
-layer-based-streaming baselines.  The "adaptive" geomean rows apply the
-engine's arch-adaptive mode choice (``repro.core.streaming.choose_mode``):
-for aggressively-GQA models tile-streaming is traffic-negative and the
-engine falls back to LAYER_STREAM, which the simulation independently
-confirms (qwen2-vl: tile-stream simulates *slower* than layer-stream).
+Plan-driven since PR 2: for every supported model the section builds
+``ExecutionPlan``s once — three forced-mode baselines plus the planner's
+arch-adaptive plan — and simulates each plan.  The adaptive geomean rows
+therefore report exactly what ``repro.plan.plan_model`` decides (for
+aggressively-GQA models tile-streaming is traffic-negative and the planner
+falls back to LAYER_STREAM, which the simulation independently confirms:
+qwen2-vl tile-streams *slower* than layer-stream).  Each model's simulated
+per-op DMA bytes are asserted against the same plan object's predicted
+``LayerPlan.hbm_bytes`` — the analytic and simulated traffic models cannot
+drift apart silently.
 
 Note: speedups over NON_STREAM exceed the paper's 2.63x geomean because
-the baseline here (like ``streamed_bytes_per_layer``) charges the full
+the baseline here (like the planner's traffic model) charges the full
 score-matrix HBM round-trips; the paper's non-streaming baseline keeps
 softmax on-chip.
 """
@@ -27,11 +29,11 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_sim.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, log_plan
 from repro.configs import registry
-from repro.core.streaming import choose_mode
 from repro.core.types import ExecutionMode
-from repro.sim import compare_modes, simulate_rewrite_stall
+from repro.plan import plan_model
+from repro.sim import simulate_plan, simulate_rewrite_stall
 
 
 def run() -> List[str]:
@@ -57,25 +59,46 @@ def run() -> List[str]:
         f"2048-bit bus + ping-pong: exposed stall "
         f"{wide['exposed_stall_frac']:.1%}"))
 
-    # --- §III three-way model comparison ---
+    # --- §III three-way model comparison: one plan per (model, mode) ---
     non_speedups, layer_speedups = [], []
+    total_checks = 0
     for arch in registry.SIM_ARCHS:
         cfg = registry.get_config(arch)
-        res = compare_modes(cfg, hw)
+        plans = {m: plan_model(cfg, hw=hw, mode=m, force_mode=True)
+                 for m in ExecutionMode}
+        adaptive_plan = plan_model(cfg, hw=hw)         # planner's decision
+        log_plan(adaptive_plan)
+        res = {m: simulate_plan(p) for m, p in plans.items()}
+        # A uniform adaptive plan is one of the forced runs — reuse it.
+        adaptive = (res[adaptive_plan.uniform_mode]
+                    if adaptive_plan.uniform_mode
+                    else simulate_plan(adaptive_plan))
         tile = res[ExecutionMode.TILE_STREAM]
         layer = res[ExecutionMode.LAYER_STREAM]
         non = res[ExecutionMode.NON_STREAM]
-        # Arch-adaptive StreamDCIM: the engine's mode choice per model.
-        chosen = choose_mode(cfg)
-        adaptive = res[chosen]
+
+        # Cross-check: simulated per-op DMA bytes == the plan's prediction
+        # for EVERY attention op (same object drives both paths; 10%
+        # covers DMA rounding).
+        for mode, plan in plans.items():
+            for lp in plan.layers:
+                sim_bytes = res[mode].op_dma_bytes(lp.name)
+                if abs(sim_bytes - lp.hbm_bytes) > 0.10 * lp.hbm_bytes:
+                    raise AssertionError(
+                        f"{arch}/{mode.value}: simulated {sim_bytes} vs "
+                        f"planned {lp.hbm_bytes} bytes for {lp.name}")
+        total_checks += sum(len(p.layers) for p in plans.values())
+
         non_speedups.append(non.cycles / adaptive.cycles)
         layer_speedups.append(layer.cycles / adaptive.cycles)
+        mode_str = (adaptive_plan.uniform_mode.value
+                    if adaptive_plan.uniform_mode else "heterogeneous")
         rows.append(csv_row(
             f"sim_{arch}", 0.0,
             f"tile {tile.cycles}cyc (hbm {tile.hbm_bytes >> 20}MiB); "
             f"vs non {non.cycles / tile.cycles:.2f}x; "
             f"vs layer {layer.cycles / tile.cycles:.2f}x; "
-            f"mode={chosen.value}"))
+            f"mode={mode_str}"))
 
     def geomean(xs):
         return math.exp(sum(math.log(x) for x in xs) / len(xs))
@@ -86,6 +109,9 @@ def run() -> List[str]:
     rows.append(csv_row(
         "sim_geomean_vs_layer_stream", 0.0,
         f"{geomean(layer_speedups):.2f}x (paper: 1.28x)"))
+    rows.append(csv_row(
+        "sim_plan_crosscheck", 0.0,
+        f"{total_checks} per-op plan-vs-sim DMA-byte checks passed"))
     return rows
 
 

@@ -1,13 +1,20 @@
 """Paper Fig. 6 (performance) + Fig. 7 (energy): Non-stream vs Layer-stream
 vs Tile-stream on ViLBERT-base and ViLBERT-large.
 
-Two measurements per cell:
-* measured CPU wall-time of one co-attention layer at reduced dims
-  (numerics proof — all modes compute the same function), and
-* the analytic HBM-traffic model at the paper's full config
-  (N_X = N_Y = 4096) projected onto v5e bandwidth -> latency and energy.
-  CPU wall-time cannot express DMA/compute overlap; the traffic model is
-  the TPU-faithful comparison (DESIGN.md §6).
+Plan-driven since PR 2: each (mode, geometry) cell builds one
+``repro.plan.LayerPlan`` and *shares it* between the two measurements —
+
+* measured CPU wall-time of one co-attention layer at reduced dims through
+  ``kernels.ops.attention_by_plan`` (numerics proof — all modes compute
+  the same function), and
+* the plan's predicted HBM traffic (``LayerPlan.hbm_bytes``) at the
+  paper's full config (N_X = N_Y = 4096) projected onto v5e bandwidth ->
+  latency and energy.  CPU wall-time cannot express DMA/compute overlap;
+  the traffic model is the TPU-faithful comparison (DESIGN.md §6).
+
+The plan's bytes are asserted against the legacy analytic entry point
+(``core.streaming.streamed_bytes_per_layer``) so the deprecation shim and
+the planner cannot drift apart.
 
 Paper reference points: ViLBERT-base speedups 2.86x (vs Non-stream) and
 1.25x (vs Layer-stream); ViLBERT-large 2.42x / 1.31x; geomean 2.63x/1.28x.
@@ -22,18 +29,20 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (E_HBM_PER_BYTE, E_PER_FLOP, HBM_BW,
-                               PEAK_FLOPS, csv_row, time_fn)
+                               PEAK_FLOPS, csv_row, log_plan, time_fn)
 from repro.configs import registry
 from repro.core.streaming import streamed_bytes_per_layer
 from repro.core.types import ExecutionMode
-from repro.kernels import ops, ref
+from repro.kernels import ops
+from repro.plan import plan_attention, plan_model
 
 MODES = [ExecutionMode.NON_STREAM, ExecutionMode.LAYER_STREAM,
          ExecutionMode.TILE_STREAM]
 
 
 def measured_layer_us(d_model: int, heads: int, seq: int) -> Dict[str, float]:
-    """CPU wall-µs for one cross-attention layer per mode (reduced dims)."""
+    """CPU wall-µs for one cross-attention layer per mode (reduced dims),
+    dispatched through per-mode LayerPlans."""
     hd = d_model // heads
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (1, heads, seq, hd), jnp.float32) * 0.3
@@ -42,8 +51,11 @@ def measured_layer_us(d_model: int, heads: int, seq: int) -> Dict[str, float]:
     wv = jax.random.normal(ks[3], (d_model, heads, hd)) * (d_model ** -0.5)
     out = {}
     for mode in MODES:
-        fn = jax.jit(lambda q, x, wk, wv, m=mode: ops.attention_by_mode(
-            m, q, x, wk, wv, causal=False))
+        lp = plan_attention(mode, seq_q=seq, seq_kv=seq, d_kv=d_model,
+                            heads=heads, kv_heads=heads, head_dim=hd,
+                            cross=True)
+        fn = jax.jit(lambda q, x, wk, wv, lp=lp: ops.attention_by_plan(
+            lp, q, x, wk, wv, causal=False))
         out[mode.value] = time_fn(fn, q, x_kv, wk, wv) * 1e6
     return out
 
@@ -51,7 +63,8 @@ def measured_layer_us(d_model: int, heads: int, seq: int) -> Dict[str, float]:
 def projected_v5e(arch: str, *, bytes_per_el: int = 1,
                   peak_flops: float = 2 * PEAK_FLOPS
                   ) -> Dict[str, Dict[str, float]]:
-    """Full-config per-co-attention-layer latency/energy per mode.
+    """Full-config per-co-attention-layer latency/energy per mode, with
+    the traffic side read off per-mode ``LayerPlan``s.
 
     Latency semantics follow real TPU execution: *separate kernels
     serialize* (the attention kernel cannot start until K/V finish writing
@@ -78,10 +91,18 @@ def projected_v5e(arch: str, *, bytes_per_el: int = 1,
     nqb = max(seq // 256, 1)
     out = {}
     for mode in MODES:
-        traffic = streamed_bytes_per_layer(
+        lp = plan_attention(mode, seq_q=seq, seq_kv=seq, d_kv=d,
+                            heads=heads, kv_heads=cfg.num_kv_heads,
+                            head_dim=hd, bytes_per_el=be, cross=True)
+        traffic = lp.hbm_bytes
+        # Shim agreement: the plan's prediction IS the legacy model.
+        legacy = streamed_bytes_per_layer(
             seq_q=seq, seq_kv=seq, d_model=d, num_heads=heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=hd, mode=mode,
             bytes_per_el=be)
+        if traffic != legacy:
+            raise AssertionError(
+                f"{arch}/{mode.value}: plan {traffic} != legacy {legacy}")
         if mode == ExecutionMode.TILE_STREAM:
             latency = max(flops / peak_flops, traffic / HBM_BW)
         elif mode == ExecutionMode.LAYER_STREAM:
@@ -119,6 +140,8 @@ def run() -> List[str]:
     geo_perf = {"non_stream": 1.0, "layer_stream": 1.0}
     geo_energy = {"non_stream": 1.0, "layer_stream": 1.0}
     for arch in ("vilbert-base", "vilbert-large"):
+        # The whole-model plan for the --json report (per-layer modes).
+        log_plan(plan_model(registry.get_config(arch)))
         proj = projected_v5e(arch)
         t_tile = proj["tile_stream"]["latency_s"]
         e_tile = proj["tile_stream"]["energy_j"]

@@ -33,3 +33,21 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan logging: sections register the plans they ran under so
+# ``run.py --json`` can attach plan summaries to the machine-readable
+# output (sweep tooling — DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+PLAN_LOG: list = []
+
+
+def log_plan(plan) -> None:
+    """Register an ``repro.plan.ExecutionPlan`` for the --json report."""
+    PLAN_LOG.append(plan)
+
+
+def reset_plan_log() -> None:
+    PLAN_LOG.clear()

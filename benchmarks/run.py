@@ -1,11 +1,20 @@
 """Benchmark harness main — one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (deliverable d).
+Prints ``name,us_per_call,derived`` CSV (deliverable d); ``--json <path>``
+additionally writes a machine-readable report (per-section rows +
+``ExecutionPlan`` summaries registered via ``benchmarks.common.log_plan``).
 
-Usage: ``python benchmarks/run.py [section ...]`` — with no arguments all
-sections run; otherwise only the named ones (e.g. ``run.py bench_sim``).
+Usage::
+
+    python benchmarks/run.py [section ...] [--json out.json]
+    python benchmarks/run.py --list
+
+With no section arguments all sections run; otherwise only the named ones
+(e.g. ``run.py bench_sim --json bench_sim.json``).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import traceback
@@ -18,11 +27,11 @@ for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
-def main(argv=None) -> None:
+def _sections():
     from benchmarks import (bench_decode, bench_kernels, bench_pruning,
                             bench_rewrite_overlap, bench_sim,
                             bench_stream_modes, roofline)
-    sections = [
+    return [
         ("bench_stream_modes", "Fig6/Fig7 stream-mode comparison",
          bench_stream_modes.run),
         ("bench_pruning", "Token pruning (paper SI claim)",
@@ -37,26 +46,80 @@ def main(argv=None) -> None:
         ("roofline", "Roofline summary (from dry-run artifacts)",
          roofline.run),
     ]
-    wanted = list(sys.argv[1:] if argv is None else argv)
-    if wanted:
+
+
+def _parse_row(row: str) -> dict:
+    """Split a ``name,us_per_call,derived`` CSV row (derived may itself
+    contain commas) into a JSON-ready record."""
+    parts = row.split(",", 2)
+    rec = {"name": parts[0]}
+    if len(parts) > 1:
+        try:
+            rec["us_per_call"] = float(parts[1])
+        except ValueError:
+            rec["us_per_call"] = parts[1]
+    if len(parts) > 2:
+        rec["derived"] = parts[2]
+    return rec
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks/run.py",
+        description="StreamDCIM repro benchmark harness")
+    ap.add_argument("sections", nargs="*",
+                    help="section names to run (default: all)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a machine-readable JSON report "
+                         "(rows + ExecutionPlan summaries)")
+    ap.add_argument("--list", action="store_true", dest="list_sections",
+                    help="print available sections and exit")
+    args = ap.parse_args(argv)
+
+    sections = _sections()
+    if args.list_sections:
+        for key, title, _ in sections:
+            print(f"{key:24s} {title}")
+        return
+
+    if args.sections:
         known = {key for key, _, _ in sections}
-        unknown = [w for w in wanted if w not in known]
+        unknown = [w for w in args.sections if w not in known]
         if unknown:
             print(f"unknown section(s) {unknown}; available: {sorted(known)}",
                   file=sys.stderr)
             sys.exit(2)
-        sections = [s for s in sections if s[0] in wanted]
+        sections = [s for s in sections if s[0] in args.sections]
+
+    from benchmarks import common
+    common.reset_plan_log()
+
+    report = {"command": "benchmarks/run.py " + " ".join(args.sections),
+              "sections": [], "plans": []}
     print("name,us_per_call,derived")
     failed = 0
     for key, title, fn in sections:
         print(f"# --- {title} ---")
+        sec = {"name": key, "title": title, "ok": True, "rows": []}
         try:
             for row in fn():
                 print(row)
+                sec["rows"].append(_parse_row(row))
         except Exception:  # noqa: BLE001
             failed += 1
+            sec["ok"] = False
+            sec["error"] = traceback.format_exc()
             print(f"# SECTION FAILED: {title}")
             traceback.print_exc()
+        report["sections"].append(sec)
+
+    if args.json:
+        report["plans"] = [p.summary() for p in common.PLAN_LOG]
+        report["ok"] = failed == 0
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# json report -> {args.json}", file=sys.stderr)
+
     if failed:
         sys.exit(1)
 

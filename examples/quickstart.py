@@ -1,19 +1,20 @@
-"""Quickstart: the paper's technique in 60 lines.
+"""Quickstart: the paper's technique in ~80 lines.
 
 Builds one ViLBERT-style cross-modal attention layer and runs it through
 all three execution systems (the paper's comparison: Non-stream /
-Layer-stream / Tile-stream), verifying numerical equivalence and printing
-the analytic HBM-traffic comparison that produces Fig. 6.
+Layer-stream / Tile-stream) via the plan API, verifying numerical
+equivalence, printing the per-mode HBM-traffic comparison that produces
+Fig. 6, and showing the compile→plan→run/simulate path on a full model
+(DESIGN.md §8).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.streaming import choose_mode, streamed_bytes_per_layer
 from repro.core.types import ExecutionMode
-from repro.kernels import ops, ref
+from repro.kernels import ops
+from repro.plan import ExecutionPlan, plan_attention, plan_model
 
 
 def main():
@@ -30,7 +31,10 @@ def main():
     print("cross-modal attention: Q from modal X, K/V generated from modal Y")
     outs = {}
     for mode in ExecutionMode:
-        outs[mode] = ops.attention_by_mode(mode, q, x_other, wk, wv,
+        lp = plan_attention(mode, seq_q=seq, seq_kv=seq, d_kv=d_model,
+                            heads=heads, kv_heads=heads, head_dim=hd,
+                            cross=True)
+        outs[mode] = ops.attention_by_plan(lp, q, x_other, wk, wv,
                                            causal=False)
         print(f"  {mode.value:13s} -> out {outs[mode].shape}")
     for mode in ExecutionMode:
@@ -40,23 +44,31 @@ def main():
     print("all three execution systems agree (allclose) ✓\n")
 
     print("analytic HBM traffic per co-attention layer "
-          "(paper config: seq 4096, d 1024, MHA):")
+          "(paper config: seq 4096, d 1024, MHA; from LayerPlan.hbm_bytes):")
     for mode in ExecutionMode:
-        t = streamed_bytes_per_layer(seq_q=4096, seq_kv=4096, d_model=1024,
-                                     num_heads=8, num_kv_heads=8,
-                                     head_dim=128, mode=mode)
-        print(f"  {mode.value:13s} {t / 2**20:10.1f} MiB")
+        lp = plan_attention(mode, seq_q=4096, seq_kv=4096, d_kv=1024,
+                            heads=8, kv_heads=8, head_dim=128,
+                            bytes_per_el=2)
+        print(f"  {mode.value:13s} {lp.hbm_bytes / 2**20:10.1f} MiB")
     print("\ntile-streaming eliminates the K/V HBM round-trip "
           "('CIM rewriting') entirely — the paper's core claim.")
 
-    print("\nmode auto-selection (TBR-CIM reconfiguration analogue):")
-    from repro.core.types import Family, ModelConfig
-    for name, d, hkv in (("vilbert (MHA)", 1024, 8),
-                         ("qwen3-32b (GQA 8kv)", 5120, 8)):
-        cfg = ModelConfig(name=name, family=Family.DENSE, num_layers=1,
-                          d_model=d, num_heads=d // 128, num_kv_heads=hkv,
-                          d_ff=1, vocab_size=8, head_dim=128)
-        print(f"  {name:22s} -> {choose_mode(cfg).value}")
+    print("\nmode auto-selection (TBR-CIM reconfiguration analogue), via "
+          "plan_model:")
+    from repro.configs import registry
+    for arch in ("vilbert-base", "qwen2-vl-2b"):
+        plan = plan_model(registry.get_config(arch))
+        modes = plan.uniform_mode.value if plan.uniform_mode else "mixed"
+        print(f"  {arch:22s} -> {modes}  "
+              f"({len(plan.layers)} attn layers, "
+              f"{plan.total_hbm_bytes / 2**20:.0f} MiB predicted)")
+
+    print("\nplans are serializable artifacts (sweep tooling):")
+    plan = plan_model(registry.get_config("vilbert-base"))
+    restored = ExecutionPlan.from_json(plan.to_json())
+    assert restored == plan
+    print(f"  to_json -> from_json round-trips "
+          f"({len(plan.to_json())} bytes); summary: {plan.summary()}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Batched serving example (deliverable b): a small LM served with the
-continuous-batching engine — prefill (TILE_STREAM cross-forwarding) +
-cached decode over batched requests.
+continuous-batching engine — prefill under the planner-resolved execution
+mode (TILE_STREAM cross-forwarding where profitable) + cached decode over
+batched requests.  The engine re-plans per admitted wave's prompt shape;
+pass ``plan=`` to pin one ``ExecutionPlan`` instead (DESIGN.md §8).
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -18,6 +20,11 @@ def main():
     mod = registry.model_module(cfg)
     params = mod.init(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, slots=4, max_len=96)
+    plan = eng.plan_for(24)
+    print(f"planner: {cfg.name} prefill -> "
+          f"{eng.mode_for(24).value} "
+          f"({len(plan.layers)} attn layers, "
+          f"{plan.total_hbm_bytes >> 20} MiB predicted)")
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

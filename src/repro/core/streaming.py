@@ -1,34 +1,35 @@
-"""StreamDCIM execution engine — mode selection + streaming encoder blocks.
+"""Legacy mode-selection entry points — deprecation shims over
+``repro.plan`` (DESIGN.md §8).
 
-The TBR-CIM macro's *mode_config* bit (hybrid vs normal reconfiguration,
-paper §II-A) maps on TPU to an analytic dataflow decision per attention
-layer (DESIGN.md §2): fusing KV-generation into attention (TILE_STREAM)
-reduces HBM traffic iff streaming the raw activations ``x_kv`` (width D)
-beats streaming materialized K/V (width 2·Hkv·hd):
+Since PR 2 the reconfiguration decision (per-layer mode selection, tiling,
+traffic prediction) lives in the planner: build an ``ExecutionPlan`` with
+``repro.plan.plan_model`` and hand it to the kernels
+(``kernels.ops.attention_by_plan``), the simulator
+(``repro.sim.simulate_plan``) and the serving engine
+(``repro.serve.Engine(plan=...)``).  The functions below keep the PR-0/1
+call sites working and are guaranteed (by ``tests/test_plan.py``) to agree
+with the planner; new code should call ``repro.plan`` directly.
 
-    per-q-block streamed bytes:   TILE_STREAM  = S·D
-                                  LAYER_STREAM = S·2·Hkv·hd   (+ one-time
-                                                 2·S·Hkv·hd write for K/V)
-
-For MHA models (the paper's ViLBERT targets: Hkv·hd = D) tile-streaming
-strictly wins — it halves streamed bytes AND removes the K/V round-trip,
-which is exactly the paper's claim.  For aggressively-GQA LMs
-(2·Hkv·hd << D) generation-fusion is traffic-negative, so the engine falls
-back to LAYER_STREAM — the normal-mode/weight-stationary path.  This
-arch-adaptive reconfiguration is the paper's microarchitectural flexibility
-reborn as a compiler-visible dataflow choice.
+The decision itself — the TBR-CIM *mode_config* bit (hybrid vs normal
+reconfiguration, paper §II-A) reborn as an analytic dataflow choice per
+attention layer — is documented in ``repro.plan.heuristics`` and
+DESIGN.md §2: fusing KV-generation into attention (TILE_STREAM) wins for
+MHA models (the paper's ViLBERT targets) and is traffic-negative for
+aggressively-GQA LMs, which fall back to LAYER_STREAM.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-from repro.core.types import AttnKind, ExecutionMode, ModelConfig
+from repro.core.types import ExecutionMode, ModelConfig
+# Planner internals re-exported for back-compat (``repro.plan.heuristics``
+# is the canonical home; this import is intentionally light — it does not
+# pull in the planner or simulator).
+from repro.plan.heuristics import attn_hbm_bytes, resolve_layer_mode
+from repro.plan.heuristics import tile_stream_profitable  # noqa: F401
 
-
-def tile_stream_profitable(d_model: int, num_kv_heads: int,
-                           head_dim: int) -> bool:
-    """True iff fused KV-generation reduces streamed HBM bytes."""
-    return 2 * num_kv_heads * head_dim >= d_model
+__all__ = ["tile_stream_profitable", "choose_mode",
+           "streamed_bytes_per_layer"]
 
 
 def choose_mode(cfg: ModelConfig, *, d_model: Optional[int] = None,
@@ -36,46 +37,28 @@ def choose_mode(cfg: ModelConfig, *, d_model: Optional[int] = None,
                 head_dim: Optional[int] = None) -> ExecutionMode:
     """Resolve the execution mode for one attention layer.
 
-    Honors an explicit cfg.execution_mode of NON_STREAM / LAYER_STREAM
-    (benchmark baselines); for TILE_STREAM, applies the profitability rule
-    unless cfg.fuse_kv_generation forces fusion on.
+    .. deprecated:: PR 2 — use ``repro.plan.plan_model`` (whole-model
+       resolution) or ``repro.plan.resolve_layer_mode`` (one layer).
     """
-    mode = cfg.execution_mode
-    if mode != ExecutionMode.TILE_STREAM:
-        return mode
-    if cfg.attn_kind == AttnKind.MLA:
-        return ExecutionMode.TILE_STREAM   # latent decompress: always fuse
-    d = d_model or cfg.d_model
-    hkv = num_kv_heads or cfg.num_kv_heads
-    hd = head_dim or cfg.head_dim
-    if cfg.fuse_kv_generation and tile_stream_profitable(d, hkv, hd):
-        return ExecutionMode.TILE_STREAM
-    return ExecutionMode.LAYER_STREAM
+    return resolve_layer_mode(
+        cfg.execution_mode,
+        d_kv=d_model or cfg.d_model,
+        num_kv_heads=num_kv_heads or cfg.num_kv_heads,
+        head_dim=head_dim or cfg.head_dim,
+        attn_kind=cfg.attn_kind,
+        fuse_kv_generation=cfg.fuse_kv_generation)
 
 
 def streamed_bytes_per_layer(seq_q: int, seq_kv: int, d_model: int,
                              num_heads: int, num_kv_heads: int, head_dim: int,
                              mode: ExecutionMode, *, block_q: int = 256,
                              bytes_per_el: int = 2) -> int:
-    """Analytic HBM-traffic model for one attention layer (used by the
-    benchmark harness to project TPU speedups from CPU-measured numerics —
-    DESIGN.md §6).  Counts Q/K/V/O/x_kv movement; weight traffic is
-    identical across modes and omitted."""
-    nqb = max(seq_q // block_q, 1)
-    q_bytes = seq_q * num_heads * head_dim * bytes_per_el
-    o_bytes = q_bytes
-    kv_width = 2 * num_kv_heads * head_dim
-    if mode == ExecutionMode.NON_STREAM:
-        # Q,K,V written+read; scores A (H·Sq·Skv) written+read; P written+
-        # read; out written.  (The paper's off-chip round-trip baseline.)
-        a_bytes = num_heads * seq_q * seq_kv * bytes_per_el
-        kv_bytes = seq_kv * kv_width * bytes_per_el
-        return (2 * q_bytes + 2 * kv_bytes + 4 * a_bytes + 2 * o_bytes
-                + seq_kv * d_model * bytes_per_el)
-    if mode == ExecutionMode.LAYER_STREAM:
-        # x_kv read once + K/V written once, then re-read per q block.
-        kv_bytes = seq_kv * kv_width * bytes_per_el
-        return (q_bytes + o_bytes + seq_kv * d_model * bytes_per_el
-                + kv_bytes + nqb * kv_bytes)
-    # TILE_STREAM: x_kv re-read per q block; K/V never touch HBM.
-    return (q_bytes + o_bytes + nqb * seq_kv * d_model * bytes_per_el)
+    """Analytic HBM-traffic model for one attention layer (DESIGN.md §6).
+
+    .. deprecated:: PR 2 — the planner records this prediction per layer
+       in ``LayerPlan.hbm_bytes``; use ``repro.plan.attn_hbm_bytes`` for
+       raw-geometry queries.
+    """
+    return attn_hbm_bytes(seq_q, seq_kv, d_model, num_heads, num_kv_heads,
+                          head_dim, mode, block_q=block_q,
+                          bytes_per_el=bytes_per_el)

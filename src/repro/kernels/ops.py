@@ -197,7 +197,30 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 # ---------------------------------------------------------------------------
 # Execution-mode dispatch: the paper's three comparison systems for one
 # attention layer given pre-computed Q and the raw KV-side activations.
+# The planner (``repro.plan``) decides the mode + tiling; the kernels only
+# execute the decision (DESIGN.md §8).
 # ---------------------------------------------------------------------------
+
+def attention_by_plan(layer_plan, q: jax.Array, x_kv: jax.Array,
+                      wk: jax.Array, wv: jax.Array, *,
+                      sin: Optional[jax.Array] = None,
+                      cos: Optional[jax.Array] = None,
+                      k_gamma: Optional[jax.Array] = None,
+                      causal: bool = False, window: int = 0,
+                      q_offset: int = 0, norm_eps: float = 1e-6,
+                      use_pallas: bool = False) -> jax.Array:
+    """Execute one attention layer according to a planner-resolved
+    ``repro.plan.LayerPlan``: its ``mode`` picks the dispatch (NON_STREAM /
+    LAYER_STREAM / TILE_STREAM — numerically equivalent, tests assert it),
+    its ``block_q``/``block_kv`` set the kernel tiling.  Array shapes may
+    be reduced vs the plan's full geometry (CPU-hosted numerics at small
+    dims); the dataflow decision is shape-independent."""
+    return _attention_dispatch(
+        layer_plan.mode, q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
+        causal=causal, window=window, q_offset=q_offset, norm_eps=norm_eps,
+        use_pallas=use_pallas, block_q=layer_plan.block_q,
+        block_k=layer_plan.block_kv)
+
 
 def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
                       wk: jax.Array, wv: jax.Array, *,
@@ -207,14 +230,33 @@ def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
                       causal: bool = False, window: int = 0,
                       q_offset: int = 0, norm_eps: float = 1e-6,
                       use_pallas: bool = False) -> jax.Array:
-    """Dispatch one attention layer through NON_STREAM / LAYER_STREAM /
-    TILE_STREAM.  All three are numerically equivalent (tests assert it);
-    they differ in fusion structure / HBM traffic."""
+    """Dispatch one attention layer by bare mode.
+
+    .. deprecated:: PR 2 — deprecation shim kept for PR-0/1 call sites;
+       build a plan (``repro.plan.plan_model`` / ``plan_attention``) and
+       call ``attention_by_plan`` instead.  Dispatches the given mode
+       verbatim (the planner's ``force_mode=True`` semantics) with the
+       default block tiling.
+    """
+    return _attention_dispatch(
+        mode, q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
+        causal=causal, window=window, q_offset=q_offset, norm_eps=norm_eps,
+        use_pallas=use_pallas)
+
+
+def _attention_dispatch(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
+                        wk: jax.Array, wv: jax.Array, *,
+                        sin: Optional[jax.Array], cos: Optional[jax.Array],
+                        k_gamma: Optional[jax.Array], causal: bool,
+                        window: int, q_offset: int, norm_eps: float,
+                        use_pallas: bool, block_q: int = 256,
+                        block_k: int = 256) -> jax.Array:
     if mode == ExecutionMode.TILE_STREAM:
         return streaming_attention(
             q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
             causal=causal, window=window, q_offset=q_offset,
-            norm_eps=norm_eps, use_pallas=use_pallas)
+            norm_eps=norm_eps, use_pallas=use_pallas,
+            block_q=block_q, block_k=block_k)
 
     # Materialize K, V (the "CIM rewriting" both baselines pay).
     k = jnp.einsum("bsd,dhe->bhse", x_kv, wk.astype(x_kv.dtype))
@@ -235,4 +277,5 @@ def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
 
     # LAYER_STREAM: flash attention over materialized K/V.
     return multi_head_attention(q, k, v, causal=causal, window=window,
-                                q_offset=q_offset, use_pallas=use_pallas)
+                                q_offset=q_offset, use_pallas=use_pallas,
+                                block_q=block_q, block_k=block_k)

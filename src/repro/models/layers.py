@@ -1,9 +1,10 @@
 """Shared model primitives (functional style: explicit param dicts).
 
-Attention mixers route through ``kernels.ops.attention_by_mode`` so every
-architecture can run the paper's three execution systems (NON_STREAM /
-LAYER_STREAM / TILE_STREAM) — the StreamDCIM technique is a first-class
-framework feature, not a bolt-on.
+Attention mixers route through the execution-mode dispatch in
+``kernels.ops`` (mode resolved per layer by the planner rules in
+``repro.plan.heuristics``) so every architecture can run the paper's three
+execution systems (NON_STREAM / LAYER_STREAM / TILE_STREAM) — the
+StreamDCIM technique is a first-class framework feature, not a bolt-on.
 """
 from __future__ import annotations
 
@@ -172,17 +173,20 @@ def attention_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
     encoder output for cross-attention — the kernel generates K/V from it on
     the fly in TILE_STREAM mode.
 
-    When the requested mode is TILE_STREAM, the per-layer profitability rule
-    (core/streaming.py — the TBR-CIM hybrid/normal reconfiguration analogue)
-    may fall back to LAYER_STREAM for aggressively-GQA geometries where
-    generation-fusion is HBM-traffic-negative (DESIGN.md §2)."""
-    from repro.core.streaming import tile_stream_profitable
-    mode = mode or cfg.execution_mode
-    if (mode == ExecutionMode.TILE_STREAM
-            and not (cfg.fuse_kv_generation and tile_stream_profitable(
-                x.shape[-1], cfg.num_kv_heads, cfg.head_dim))):
-        mode = ExecutionMode.LAYER_STREAM
+    Mode resolution goes through the planner's per-layer rule
+    (repro.plan.heuristics — the TBR-CIM hybrid/normal reconfiguration
+    analogue): a TILE_STREAM request may fall back to LAYER_STREAM for
+    aggressively-GQA geometries where generation-fusion is
+    HBM-traffic-negative (DESIGN.md §2).  Full-model paths resolve this
+    once via ``repro.plan.plan_model``; this per-call resolution is
+    guaranteed to agree with it (tests/test_plan.py)."""
+    from repro.plan.heuristics import resolve_layer_mode
     x_kv = x if x_kv is None else x_kv
+    mode = resolve_layer_mode(
+        mode or cfg.execution_mode, d_kv=x_kv.shape[-1],
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        attn_kind=cfg.attn_kind,
+        fuse_kv_generation=cfg.fuse_kv_generation)
     window = cfg.sliding_window if cfg.attn_kind == AttnKind.SLIDING else 0
 
     from repro.distributed.hints import constrain

@@ -90,9 +90,20 @@ def init(key, cfg: ModelConfig) -> Params:
     }
 
 
+def _resolve(cfg: ModelConfig, mode: ExecutionMode, d_kv: int,
+             kv_heads: int, head_dim: int) -> ExecutionMode:
+    """Planner rule per layer (repro.plan.heuristics) on the true KV-source
+    width — cross-attention resolves against the *other* modality's d."""
+    from repro.plan.heuristics import resolve_layer_mode
+    return resolve_layer_mode(mode, d_kv=d_kv, num_kv_heads=kv_heads,
+                              head_dim=head_dim,
+                              fuse_kv_generation=cfg.fuse_kv_generation)
+
+
 def _self_attn(p: Params, cfg: ModelConfig, x: jax.Array, heads: int,
                mode: ExecutionMode, use_pallas: bool) -> jax.Array:
     q = jnp.einsum("bsd,dhe->bhse", x, p["wq"].astype(x.dtype))
+    mode = _resolve(cfg, mode, x.shape[-1], heads, q.shape[-1])
     out = ops.attention_by_mode(mode, q, x, p["wk"], p["wv"], causal=False,
                                 use_pallas=use_pallas)
     return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x.dtype))
@@ -104,6 +115,7 @@ def _co_attn(p: Params, cfg: ModelConfig, x_own: jax.Array,
     """Q from own stream; K/V generated from the *other* modality — the
     mixed-stationary cross-forwarding target (paper Fig. 4a)."""
     q = jnp.einsum("bsd,dhe->bhse", x_own, p["wq"].astype(x_own.dtype))
+    mode = _resolve(cfg, mode, x_other.shape[-1], q.shape[1], q.shape[-1])
     out = ops.attention_by_mode(mode, q, x_other, p["wk"], p["wv"],
                                 causal=False, use_pallas=use_pallas)
     return jnp.einsum("bhse,hed->bsd", out, p["wo"].astype(x_own.dtype))

@@ -1,0 +1,42 @@
+"""``repro.plan`` — the unified compile→plan→run/simulate API (DESIGN.md §8).
+
+StreamDCIM's core contribution is a *reconfiguration decision*: per-layer
+macro-mode selection (normal vs hybrid → NON_STREAM / LAYER_STREAM /
+TILE_STREAM), tiling, and rewrite scheduling.  ``plan_model`` makes that
+decision once per (model, shape, hardware) triple and records it in an
+``ExecutionPlan`` — a sequence of per-layer ``LayerPlan``s with resolved
+modes, block tiling, fuse/prune decisions, and predicted HBM bytes +
+rewrite cycles — consumed by the kernel path
+(``kernels.ops.attention_by_plan``), the simulator
+(``sim.simulate_plan``), and the serving engine
+(``serve.Engine(plan=...)``).  Plans serialize (``to_json``) for sweep
+tooling and replay.
+
+``repro.plan.heuristics`` holds the decision rules (formerly scattered
+across ``core.streaming``, ``kernels.ops``, ``sim.workload`` and
+``serve.engine``); the legacy entry points remain as deprecation shims.
+
+This module keeps its heavy imports lazy (PEP 562) so that the
+``core.streaming`` shims don't drag the simulator package into every
+model import.
+"""
+from repro.plan.heuristics import (DEFAULT_BLOCK, attn_hbm_bytes,
+                                   resolve_layer_mode,
+                                   tile_stream_profitable)
+
+__all__ = [
+    "DEFAULT_BLOCK", "attn_hbm_bytes", "resolve_layer_mode",
+    "tile_stream_profitable",
+    "ExecutionPlan", "LayerPlan", "GemmPlan", "PLAN_VERSION",
+    "plan_model", "plan_attention", "resolve_hw",
+]
+
+_PLANNER_NAMES = {"ExecutionPlan", "LayerPlan", "GemmPlan", "PLAN_VERSION",
+                  "plan_model", "plan_attention", "resolve_hw"}
+
+
+def __getattr__(name):
+    if name in _PLANNER_NAMES:
+        from repro.plan import planner
+        return getattr(planner, name)
+    raise AttributeError(f"module 'repro.plan' has no attribute {name!r}")

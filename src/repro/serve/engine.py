@@ -3,8 +3,15 @@
 The engine owns a fixed decode batch of ``slots``; requests are admitted
 into free slots (prompt prefilled into that slot's cache region), every
 ``decode_step`` advances all active slots by one token, finished slots are
-recycled.  Prefill uses the execution-mode dispatch (TILE_STREAM cross-
-forwarding); decode is the cached path.
+recycled.  Prefill runs the planner-resolved execution mode (TILE_STREAM
+cross-forwarding where profitable); decode is the cached path.
+
+Mode resolution (PR 2): the engine consumes an ``repro.plan.ExecutionPlan``
+— pass ``plan=`` to pin one, or let the engine call ``plan_model`` per
+admitted wave's padded prompt length, so the StreamDCIM reconfiguration
+decision tracks each batch's actual shape instead of being frozen at
+construction (DESIGN.md §8).  The legacy ``mode=`` kwarg remains as a
+deprecation shim that bypasses the planner.
 
 Single-host reference implementation (examples/serve_batch.py); the sharded
 variant jits prefill/decode with the same shardings as launch/dryrun.py
@@ -34,12 +41,19 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512,
+                 plan=None,
                  mode: Optional[ExecutionMode] = None):
+        """``plan``: an ``repro.plan.ExecutionPlan`` to serve under (its
+        resolved mode is used for every wave); default: re-plan per wave
+        shape.  ``mode``: deprecated explicit override (pre-PR-2 API) —
+        skips the planner entirely."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.mode = mode or cfg.execution_mode
+        self.plan = plan
+        self._forced_mode = mode
+        self._plan_cache: Dict[int, Any] = {}
         self.mod = registry.model_module(cfg)
         self._decode = jax.jit(
             lambda p, c, t: self.mod.decode_step(p, cfg, c, t))
@@ -51,6 +65,31 @@ class Engine:
         req.out_tokens = []
         self._queue.append(req)
 
+    def plan_for(self, seq_len: int):
+        """The ``ExecutionPlan`` governing a wave of padded prompt length
+        ``seq_len`` (cached per length).  A construction-time ``plan=``
+        wins; attention-free families have nothing to plan (None)."""
+        if self.plan is not None:
+            return self.plan
+        if self.cfg.num_heads == 0:
+            return None
+        if seq_len not in self._plan_cache:
+            from repro.plan import plan_model
+            self._plan_cache[seq_len] = plan_model(self.cfg,
+                                                   seq_len=seq_len)
+        return self._plan_cache[seq_len]
+
+    def mode_for(self, seq_len: int) -> ExecutionMode:
+        """Planner-resolved prefill mode for one wave (decoder plans are
+        uniform across layers; heterogeneous plans use the first layer's
+        mode until per-layer prefill dispatch lands — ROADMAP)."""
+        if self._forced_mode is not None:       # deprecated explicit override
+            return self._forced_mode
+        plan = self.plan_for(seq_len)
+        if plan is None or not plan.layers:
+            return self.cfg.execution_mode
+        return plan.uniform_mode or plan.layers[0].mode
+
     def _prefill_batch(self, reqs: List[Request]):
         """Pad prompts to a common length, prefill, return caches+logits."""
         S = max(len(r.prompt) for r in reqs)
@@ -59,7 +98,7 @@ class Engine:
             toks[i, S - len(r.prompt):] = r.prompt      # left-pad
         logits, cache = self.mod.prefill(
             self.params, self.cfg, {"tokens": jnp.asarray(toks)},
-            max_len=self.max_len, mode=self.mode)
+            max_len=self.max_len, mode=self.mode_for(S))
         return logits[:, -1], cache
 
     def run(self, *, greedy: bool = True) -> List[Request]:

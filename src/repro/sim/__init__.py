@@ -25,28 +25,38 @@ Module map
 ``trace.py``     Per-tile event traces; utilization, latency, DMA-byte
                  and rewrite-stall summaries.
 ``workload.py``  Lowers ``ModelConfig``s (ViLBERT-base/large co-TRM,
-                 whisper enc-dec, qwen2-vl / dense decoders) into the
-                 per-layer op graphs the schedulers execute.
+                 whisper enc-dec, qwen2-vl / dense decoders) — or
+                 ``repro.plan.ExecutionPlan``s directly
+                 (``workload_from_plan``) — into the per-layer op graphs
+                 the schedulers execute.
+
+Since PR 2 the canonical entry point is plan-driven (DESIGN.md §8):
+``simulate_plan(repro.plan.plan_model(cfg, ...))`` executes each op under
+*that op's* planner-resolved mode, so heterogeneous per-layer modes run
+in one simulated model; ``simulate_model`` / ``compare_modes`` build the
+plans internally for the legacy config-first signatures.
 
 Hardware design points live in ``repro.configs.hardware`` and are
 registered in ``repro.configs.registry.HW_CONFIGS``.
 
 Out of scope (ROADMAP §Simulator): energy model, decode-step workloads,
-DTPU pruning interaction, multi-macro-group sweeps, Pallas-trace replay.
+DTPU pruning interaction, multi-macro-group sweeps, plan/trace replay.
 """
 from repro.configs.hardware import (HW_PRESETS, HardwareConfig,
                                     STREAMDCIM_BASE, STREAMDCIM_SMALL,
                                     STREAMDCIM_WIDEBUS)
 from repro.sim.macro import MacroArray, MacroMode
 from repro.sim.pipeline import (SimResult, compare_modes, simulate,
-                                simulate_model, simulate_rewrite_stall)
+                                simulate_model, simulate_plan,
+                                simulate_rewrite_stall)
 from repro.sim.trace import Event, Trace
-from repro.sim.workload import AttnOp, GemmOp, Layer, Workload, build_workload
+from repro.sim.workload import (AttnOp, GemmOp, Layer, Workload,
+                                build_workload, workload_from_plan)
 
 __all__ = [
     "HW_PRESETS", "HardwareConfig", "STREAMDCIM_BASE", "STREAMDCIM_SMALL",
     "STREAMDCIM_WIDEBUS", "MacroArray", "MacroMode", "SimResult",
-    "compare_modes", "simulate", "simulate_model", "simulate_rewrite_stall",
-    "Event", "Trace", "AttnOp", "GemmOp", "Layer", "Workload",
-    "build_workload",
+    "compare_modes", "simulate", "simulate_model", "simulate_plan",
+    "simulate_rewrite_stall", "Event", "Trace", "AttnOp", "GemmOp", "Layer",
+    "Workload", "build_workload", "workload_from_plan",
 ]

@@ -94,8 +94,10 @@ def cross_forward_attention(eng: Engine, hw: HardwareConfig, op: AttnOp,
     K/V only ever cross the NOC.
     """
     ab = hw.act_bytes
-    nqb = math.ceil(op.seq_q / BLOCK)
-    nkb = math.ceil(op.seq_kv / BLOCK)
+    bq = getattr(op, "block_q", BLOCK)
+    bkv = getattr(op, "block_kv", BLOCK)
+    nqb = math.ceil(op.seq_q / bq)
+    nkb = math.ceil(op.seq_kv / bkv)
     q_bytes = op.seq_q * op.heads * op.head_dim * ab
 
     # Q projection on the stationary-weight macros, written out once.
@@ -105,8 +107,8 @@ def cross_forward_attention(eng: Engine, hw: HardwareConfig, op: AttnOp,
     qdma = eng.task("dma", "HBM", dma_cycles(hw, q_bytes), [qgen],
                     nbytes=q_bytes, tag=f"{tag}:qdma")
 
-    kv_tile_bytes = 2 * BLOCK * op.kv_heads * op.head_dim * ab
-    x_tile_bytes = BLOCK * op.d_kv * ab
+    kv_tile_bytes = 2 * bkv * op.kv_heads * op.head_dim * ab
+    x_tile_bytes = bkv * op.d_kv * ab
     ends = []
     for i in range(nqb):
         compute_hist: List[int] = []   # per-tile QK/PV tasks of this q-block
@@ -117,7 +119,7 @@ def cross_forward_attention(eng: Engine, hw: HardwareConfig, op: AttnOp,
             # K_j and V_j generated from the x_kv tile (one read feeds both).
             kvgen = eng.task(
                 "compute", "GEN",
-                2 * gen.gemm_cycles(BLOCK, op.d_kv,
+                2 * gen.gemm_cycles(bkv, op.d_kv,
                                     op.kv_heads * op.head_dim),
                 [xdma], tag=f"{tag}:kvgen:q{i}k{j}")
             fwd = eng.task("forward", "NOC", noc_cycles(hw, kv_tile_bytes),
@@ -137,7 +139,7 @@ def cross_forward_attention(eng: Engine, hw: HardwareConfig, op: AttnOp,
             c_deps = [rw, qdma] + compute_hist[-1:]
             comp = eng.task(
                 "compute", "ATTN",
-                2 * attn.gemm_cycles(BLOCK, op.head_dim, BLOCK,
+                2 * attn.gemm_cycles(bq, op.head_dim, bkv,
                                      count=op.heads),
                 c_deps, tag=f"{tag}:qkpv:q{i}k{j}")
             compute_hist.append(comp)

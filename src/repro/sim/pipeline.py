@@ -42,7 +42,7 @@ from repro.sim.workload import (AttnOp, BLOCK, GemmOp, Workload,
 @dataclasses.dataclass(frozen=True)
 class SimResult:
     workload: str
-    mode: ExecutionMode
+    mode: Optional[ExecutionMode]   # None: heterogeneous plan-driven run
     hw: str
     cycles: int
     hbm_bytes: int
@@ -66,23 +66,7 @@ class _Scheduler:
         self.gen = MacroArray(hw, hw.gen_groups, MacroMode.NORMAL)
 
     def simulate(self, wl: Workload) -> SimResult:
-        eng = Engine()
-        prev = eng.barrier([], tag="start")
-        layer_marks: List[int] = []
-        for layer in wl.layers:
-            for op in layer.ops:
-                if isinstance(op, AttnOp):
-                    prev = self.build_attn(eng, op, prev)
-                else:
-                    prev = self.build_gemm(eng, op, prev)
-            prev = eng.barrier([prev], tag=f"layer{layer.index}")
-            layer_marks.append(prev)
-        trace = eng.run()
-        finish = eng.finish_times
-        bounds = [0] + [finish[m] for m in layer_marks]
-        per_layer = tuple(b - a for a, b in zip(bounds, bounds[1:]))
-        return SimResult(wl.name, self.mode, self.hw.name, trace.makespan,
-                         trace.bytes_moved("HBM"), per_layer, trace)
+        return _simulate_ops(wl, self.hw, lambda op: self, self.mode)
 
     # GEMMs (FFN, output projections) are weight-stationary and identical
     # across modes; streaming modes keep their activations on-chip.
@@ -120,8 +104,10 @@ class _LayerStream(_Scheduler):
 
     def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
         hw, ab = self.hw, self.hw.act_bytes
-        nqb = math.ceil(op.seq_q / BLOCK)
-        nkb = math.ceil(op.seq_kv / BLOCK)
+        bq = getattr(op, "block_q", BLOCK)
+        bkv = getattr(op, "block_kv", BLOCK)
+        nqb = math.ceil(op.seq_q / bq)
+        nkb = math.ceil(op.seq_kv / bkv)
         q_bytes = op.seq_q * op.heads * op.head_dim * ab
         x_bytes = op.seq_kv * op.d_kv * ab
         kv_bytes = op.seq_kv * op.kv_width * ab
@@ -143,7 +129,7 @@ class _LayerStream(_Scheduler):
         # Layer-granularity sync: attention waits for the full K/V layer.
         barrier = eng.barrier([kvw, qdma], tag=f"{op.name}:layer_sync")
 
-        kv_tile_bytes = 2 * BLOCK * op.kv_heads * op.head_dim * ab
+        kv_tile_bytes = 2 * bkv * op.kv_heads * op.head_dim * ab
         ends = []
         for i in range(nqb):
             prev_comp: List[int] = []
@@ -157,7 +143,7 @@ class _LayerStream(_Scheduler):
                               tag=f"{op.name}:rw:q{i}k{j}")
                 comp = eng.task("compute", "ATTN",
                                 2 * self.attn.gemm_cycles(
-                                    BLOCK, op.head_dim, BLOCK,
+                                    bq, op.head_dim, bkv,
                                     count=op.heads),
                                 [rw] + prev_comp[-1:],
                                 tag=f"{op.name}:qkpv:q{i}k{j}")
@@ -266,22 +252,94 @@ _SCHEDULERS = {
 }
 
 
+def _simulate_ops(wl: Workload, hw: HardwareConfig, sched_for_op,
+                  mode: Optional[ExecutionMode]) -> SimResult:
+    """The shared per-layer scheduling loop: layers chain sequentially;
+    ``sched_for_op(op)`` picks the scheduler that builds each op's task
+    graph — a constant for the homogeneous paths, per-op for plan-driven
+    simulation (heterogeneous modes in one model)."""
+    eng = Engine()
+    prev = eng.barrier([], tag="start")
+    layer_marks: List[int] = []
+    for layer in wl.layers:
+        for op in layer.ops:
+            sched = sched_for_op(op)
+            if isinstance(op, AttnOp):
+                prev = sched.build_attn(eng, op, prev)
+            else:
+                prev = sched.build_gemm(eng, op, prev)
+        prev = eng.barrier([prev], tag=f"layer{layer.index}")
+        layer_marks.append(prev)
+    trace = eng.run()
+    finish = eng.finish_times
+    bounds = [0] + [finish[m] for m in layer_marks]
+    per_layer = tuple(b - a for a, b in zip(bounds, bounds[1:]))
+    return SimResult(wl.name, mode, hw.name, trace.makespan,
+                     trace.bytes_moved("HBM"), per_layer, trace)
+
+
 def simulate(wl: Workload, hw: HardwareConfig,
              mode: ExecutionMode) -> SimResult:
     return _SCHEDULERS[mode](hw).simulate(wl)
 
 
-def simulate_model(cfg: ModelConfig, hw: HardwareConfig = STREAMDCIM_BASE,
+def simulate_plan(plan, hw: Optional[HardwareConfig] = None) -> SimResult:
+    """Execute an ``repro.plan.ExecutionPlan``: the plan's op list is
+    lowered directly (``workload_from_plan``) and each op's task graph is
+    built by the scheduler for *that op's* resolved mode — per-layer
+    heterogeneous modes run in one simulated model, the substrate for
+    plan/trace replay (ROADMAP §Simulator).  ``SimResult.mode`` is the
+    plan's uniform mode, or None for a heterogeneous plan."""
+    from repro.sim.workload import workload_from_plan
+    hw = hw or _hw_for_plan(plan)
+    scheds = {m: _SCHEDULERS[m](hw) for m in ExecutionMode}
+    mode_of: Dict[str, ExecutionMode] = {}
+    for lp in plan.layers:
+        mode_of[lp.name] = lp.mode
+    for g in plan.gemms:
+        mode_of[g.name] = g.mode
+    wl = workload_from_plan(plan)
+    return _simulate_ops(wl, hw, lambda op: scheds[mode_of[op.name]],
+                         plan.uniform_mode)
+
+
+def _hw_for_plan(plan) -> HardwareConfig:
+    if hasattr(plan, "hw_config"):
+        return plan.hw_config()      # carries ad-hoc design points verbatim
+    from repro.configs.hardware import HW_PRESETS
+    return HW_PRESETS[plan.hw]
+
+
+def simulate_model(cfg, hw: Optional[HardwareConfig] = None,
                    mode: Optional[ExecutionMode] = None,
                    seq_len: int = 0) -> SimResult:
-    return simulate(build_workload(cfg, seq_len), hw,
+    """Simulate a ``ModelConfig`` (legacy: mode forced or taken from the
+    config; default hardware STREAMDCIM_BASE) or an
+    ``repro.plan.ExecutionPlan`` (the planned path — per-layer modes come
+    from the plan; ``hw`` overrides the plan's recorded preset, ``mode``
+    is rejected: re-plan instead)."""
+    if hasattr(cfg, "layers") and hasattr(cfg, "gemms"):
+        if mode is not None:
+            raise ValueError(
+                "mode= conflicts with an ExecutionPlan (the plan already "
+                "records per-layer modes); build a new plan instead")
+        return simulate_plan(cfg, hw=hw)
+    return simulate(build_workload(cfg, seq_len), hw or STREAMDCIM_BASE,
                     mode or cfg.execution_mode)
 
 
 def compare_modes(cfg: ModelConfig, hw: HardwareConfig = STREAMDCIM_BASE,
                   seq_len: int = 0) -> Dict[ExecutionMode, SimResult]:
-    wl = build_workload(cfg, seq_len)
-    return {m: simulate(wl, hw, m) for m in ExecutionMode}
+    """Three forced-mode plans for one model, built once and simulated —
+    the §III comparison harness.  Each plan pins every layer to one mode
+    (``force_mode=True``), so TILE_STREAM is simulated even where the
+    planner would fall back (that inversion is the GQA cross-check).
+    ``hw`` is passed through to the simulation verbatim, so ad-hoc
+    (unregistered / modified) design points sweep correctly."""
+    from repro.plan.planner import plan_model
+    return {m: simulate_plan(plan_model(cfg, hw=hw, seq_len=seq_len,
+                                        mode=m, force_mode=True), hw=hw)
+            for m in ExecutionMode}
 
 
 def simulate_rewrite_stall(hw: HardwareConfig = STREAMDCIM_BASE,

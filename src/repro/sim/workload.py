@@ -36,6 +36,8 @@ class AttnOp:
     kv_heads: int
     head_dim: int
     cross: bool = False  # K/V generated from the *other* stream
+    block_q: int = BLOCK   # tile edges the schedulers iterate with —
+    block_kv: int = BLOCK  # plan-driven lowering carries the plan's tiling
 
     @property
     def kv_width(self) -> int:
@@ -83,10 +85,40 @@ def _attn_block(tag: str, seq_q: int, seq_kv: int, d_q: int, d_kv: int,
             GemmOp(f"{tag}_oproj", seq_q, heads * hd, d_q)]
 
 
-def build_workload(cfg: ModelConfig, seq_len: int = 0) -> Workload:
+def workload_from_plan(plan) -> Workload:
+    """Lower an ``repro.plan.ExecutionPlan`` back into the op graph the
+    schedulers execute — no mode re-derivation: the plan *is* the op list
+    (attention ``LayerPlan``s + ``GemmPlan``s in recorded op order), and
+    per-op modes stay on the plan (``sim.pipeline.simulate_plan`` reads
+    them).  Duck-typed so this module never imports the planner."""
+    ops: List[Tuple[int, int, object]] = []          # (op_index, layer, op)
+    for lp in plan.layers:
+        ops.append((lp.op_index, lp.layer_index,
+                    AttnOp(lp.name, lp.seq_q, lp.seq_kv, lp.d_q, lp.d_kv,
+                           lp.heads, lp.kv_heads, lp.head_dim,
+                           cross=lp.cross, block_q=lp.block_q,
+                           block_kv=lp.block_kv)))
+    for g in plan.gemms:
+        ops.append((g.op_index, g.layer_index, GemmOp(g.name, g.m, g.k, g.n)))
+    ops.sort(key=lambda t: t[0])
+    layers: List[Layer] = []
+    for _, li, op in ops:
+        if not layers or layers[-1].index != li:
+            layers.append(Layer(li, ()))
+        layers[-1] = Layer(li, layers[-1].ops + (op,))
+    return Workload(plan.model, tuple(layers))
+
+
+def build_workload(cfg, seq_len: int = 0) -> Workload:
     """seq_len = 0 picks the model's paper-typical sequence (ViLBERT:
     N_X = N_Y = 4096; whisper: 1500-frame encoder / 448-token decoder;
-    decoders: 4096), padded to the tile block."""
+    decoders: 4096), padded to the tile block.
+
+    Also accepts an ``repro.plan.ExecutionPlan`` (PR 2): the plan is
+    lowered directly (``workload_from_plan``) instead of re-deriving the
+    op graph from the config."""
+    if hasattr(cfg, "layers") and hasattr(cfg, "gemms"):
+        return workload_from_plan(cfg)
     if cfg.num_heads == 0:
         raise ValueError(
             f"{cfg.name}: attention-free families are out of simulator "

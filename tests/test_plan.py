@@ -1,0 +1,381 @@
+"""ExecutionPlan API (PR 2, DESIGN.md §8): plan consistency across the
+three consumers, deprecation-shim agreement, serialization round-trip,
+heterogeneous plans, and planner-resolved serving.
+
+The load-bearing invariant: ONE plan object, built once per (model,
+shape, hw) triple, is what the kernel path, the simulator, and the
+serving engine all consume — and its predicted per-layer HBM bytes equal
+the legacy analytic model AND the simulator's DMA accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import streaming
+from repro.core.types import (ExecutionMode, Family, ModelConfig, SHAPES)
+from repro.kernels import ops
+from repro.plan import (ExecutionPlan, plan_attention, plan_model,
+                        resolve_layer_mode, tile_stream_profitable)
+from repro.serve.engine import Engine
+from repro.sim import (STREAMDCIM_BASE, build_workload, compare_modes,
+                       simulate_model, simulate_plan)
+from repro.sim.workload import AttnOp
+
+EM = ExecutionMode
+
+PLANNABLE = [a for a in registry.ARCHS
+             if registry.get_config(a).num_heads > 0]
+
+
+# ------------------------------------------------------- plan consistency
+
+@pytest.mark.parametrize("arch", PLANNABLE)
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_plan_bytes_match_analytic_model_everywhere(arch, shape):
+    """For every registry model x shape cell, every LayerPlan's predicted
+    bytes equal the legacy analytic entry point called with the plan's own
+    recorded geometry and resolved mode — the planner and the deprecation
+    shim cannot drift apart."""
+    cfg = registry.get_config(arch)
+    plan = plan_model(cfg, shape)
+    assert plan.layers, arch
+    assert plan.shape == shape
+    for lp in plan.layers:
+        ana = streaming.streamed_bytes_per_layer(
+            lp.seq_q, lp.seq_kv, lp.d_kv, lp.heads, lp.kv_heads,
+            lp.head_dim, lp.mode, block_q=lp.block_q,
+            bytes_per_el=STREAMDCIM_BASE.act_bytes)
+        assert lp.hbm_bytes == ana, lp.name
+
+
+@pytest.mark.parametrize("arch", registry.SIM_ARCHS)
+def test_plan_bytes_match_simulated_dma_bytes(arch):
+    """Three-way equality, third leg: the simulator's per-op HBM DMA
+    accounting agrees with the same plan's prediction (10% covers DMA
+    burst rounding) — extends the PR-1 cross-validation to the plan API."""
+    cfg = registry.get_config(arch)
+    for mode in ExecutionMode:
+        plan = plan_model(cfg, mode=mode, force_mode=True)
+        res = simulate_plan(plan)
+        for lp in plan.layers[:2] + plan.layers[-1:]:
+            sim_bytes = res.op_dma_bytes(lp.name)
+            assert sim_bytes == pytest.approx(lp.hbm_bytes, rel=0.10), \
+                (arch, mode, lp.name)
+
+
+def test_attention_free_archs_rejected_clearly():
+    cfg = registry.get_config("mamba2-780m")
+    with pytest.raises(ValueError, match="attention-free"):
+        plan_model(cfg)
+
+
+# -------------------------------------------------- deprecation shims
+
+@pytest.mark.parametrize("arch", PLANNABLE)
+def test_choose_mode_shim_agrees_with_planner(arch):
+    """The legacy per-config entry point must resolve exactly what the
+    planner records for the model's self-attention layers (cross-attention
+    layers may legitimately differ: the planner sees the true KV-source
+    width)."""
+    cfg = registry.get_config(arch)
+    plan = plan_model(cfg)
+    legacy = streaming.choose_mode(cfg)
+    for lp in plan.layers:
+        if lp.cross or lp.d_kv != cfg.d_model:
+            continue
+        assert lp.mode == legacy, lp.name
+
+
+def test_choose_mode_shim_still_honors_explicit_baselines():
+    base = dict(name="t", family=Family.DENSE, num_layers=1, d_model=1024,
+                num_heads=8, num_kv_heads=8, d_ff=1, vocab_size=8,
+                head_dim=128)
+    for forced in (EM.NON_STREAM, EM.LAYER_STREAM):
+        cfg = ModelConfig(**{**base, "execution_mode": forced})
+        assert streaming.choose_mode(cfg) == forced
+        assert plan_model(cfg).uniform_mode == forced
+
+
+def test_attention_by_mode_shim_matches_attention_by_plan():
+    """The legacy dispatch and the plan dispatch are the same computation
+    (shim == planner force_mode semantics)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    B, H, Sq, Sk, hd, D = 1, 4, 96, 128, 32, 128
+    q = jax.random.normal(ks[0], (B, H, Sq, hd)) * 0.4
+    x_kv = jax.random.normal(ks[1], (B, Sk, D)) * 0.4
+    wk = jax.random.normal(ks[2], (D, H, hd)) * (D ** -0.5)
+    wv = jax.random.normal(ks[3], (D, H, hd)) * (D ** -0.5)
+    for mode in ExecutionMode:
+        lp = plan_attention(mode, seq_q=Sq, seq_kv=Sk, d_kv=D, heads=H,
+                            kv_heads=H, head_dim=hd)
+        assert lp.mode == mode                     # force_mode pins verbatim
+        by_plan = ops.attention_by_plan(lp, q, x_kv, wk, wv, causal=True)
+        by_mode = ops.attention_by_mode(mode, q, x_kv, wk, wv, causal=True)
+        np.testing.assert_allclose(np.asarray(by_plan), np.asarray(by_mode),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_plan_attention_resolution_matches_rules():
+    gqa = dict(seq_q=256, seq_kv=256, d_kv=5120, heads=40, kv_heads=8,
+               head_dim=128)
+    lp = plan_attention(EM.TILE_STREAM, force_mode=False, **gqa)
+    assert lp.mode == EM.LAYER_STREAM              # GQA fallback
+    assert not lp.fuse_kv
+    assert not tile_stream_profitable(5120, 8, 128)
+    assert resolve_layer_mode(EM.TILE_STREAM, d_kv=5120, num_kv_heads=8,
+                              head_dim=128) == EM.LAYER_STREAM
+
+
+# ------------------------------------------------- serialization round-trip
+
+def test_json_round_trip_reproduces_three_way_ordering():
+    """plan_model(...).to_json() -> load -> simulate_model(plan) reproduces
+    PR-1's three-way geomean ordering (the acceptance criterion)."""
+    cfg = registry.get_config("vilbert-base")
+    cycles = {}
+    for mode in ExecutionMode:
+        plan = plan_model(cfg, mode=mode, force_mode=True)
+        restored = ExecutionPlan.from_json(plan.to_json())
+        assert restored == plan                    # exact dataclass equality
+        cycles[mode] = simulate_model(restored).cycles
+    assert cycles[EM.TILE_STREAM] < cycles[EM.LAYER_STREAM] \
+        < cycles[EM.NON_STREAM]
+    # PR-1 acceptance floors (paper: 2.63x / 1.28x geomean).
+    assert cycles[EM.NON_STREAM] / cycles[EM.TILE_STREAM] >= 2.0
+    assert cycles[EM.LAYER_STREAM] / cycles[EM.TILE_STREAM] >= 1.1
+
+
+def test_json_rejects_unknown_version():
+    plan = plan_model(registry.get_config("whisper-base"))
+    d = plan.to_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        ExecutionPlan.from_dict(d)
+
+
+# ------------------------------------------------------ heterogeneous plans
+
+def test_heterogeneous_plan_simulates_end_to_end():
+    """Different modes on different layers of one model simulate in one
+    run, landing strictly between the homogeneous extremes."""
+    cfg = registry.get_config("vilbert-base")
+    tile = simulate_plan(plan_model(cfg, mode=EM.TILE_STREAM,
+                                    force_mode=True))
+    layer = simulate_plan(plan_model(cfg, mode=EM.LAYER_STREAM,
+                                     force_mode=True))
+    het_plan = plan_model(cfg, layer_modes={
+        i: (EM.LAYER_STREAM if i % 2 else EM.TILE_STREAM)
+        for i in range(cfg.num_layers)})
+    assert het_plan.heterogeneous
+    assert set(het_plan.modes) == {EM.TILE_STREAM, EM.LAYER_STREAM}
+    het = simulate_plan(het_plan)
+    assert het.mode is None                        # no single mode
+    assert tile.cycles < het.cycles < layer.cycles
+    assert tile.hbm_bytes < het.hbm_bytes < layer.hbm_bytes
+    # Simulated totals still track the heterogeneous plan's prediction.
+    predicted = het_plan.total_hbm_bytes
+    attn_sim = sum(het.op_dma_bytes(lp.name) for lp in het_plan.layers)
+    assert attn_sim == pytest.approx(predicted, rel=0.10)
+
+
+def test_with_layer_modes_recomputes_predictions():
+    cfg = registry.get_config("vilbert-base")
+    plan = plan_model(cfg)                         # all TILE_STREAM (MHA)
+    name = plan.layers[0].name
+    changed = plan.with_layer_modes({name: EM.NON_STREAM})
+    lp0, lp1 = plan.layer(name), changed.layer(name)
+    assert lp1.mode == EM.NON_STREAM and not lp1.fuse_kv
+    assert lp1.hbm_bytes > lp0.hbm_bytes           # NON_STREAM round-trips
+    # Untouched layers are identical; gemms of the layer follow its mode.
+    assert changed.layers[1:] == plan.layers[1:]
+    li = lp1.layer_index
+    assert all(g.mode == EM.NON_STREAM for g in changed.gemms
+               if g.layer_index == li)
+
+
+def test_layer_override_moves_the_ops_own_projection():
+    """An op-name override must also move that op's output projection to
+    the new mode (gemms follow the nearest *preceding* attention op, not
+    the layer's first attention op)."""
+    cfg = registry.get_config("whisper-base")
+    plan = plan_model(cfg, layer_modes={"dec0_cross": EM.NON_STREAM})
+    assert plan.layer("dec0_cross").mode == EM.NON_STREAM
+    assert plan.layer("dec0_self").mode == EM.TILE_STREAM
+    gemm_modes = {g.name: g.mode for g in plan.gemms}
+    assert gemm_modes["dec0_cross_oproj"] == EM.NON_STREAM
+    assert gemm_modes["dec0_self_oproj"] == EM.TILE_STREAM
+    # FFN gemms trail the cross op — they follow the override too.
+    assert gemm_modes["dec0_ffn_up"] == EM.NON_STREAM
+
+
+def test_compare_modes_honors_ad_hoc_hardware():
+    """A modified (even unregistered) HardwareConfig must actually reach
+    the simulation — not be silently swapped for the registry preset."""
+    import dataclasses as dc
+    cfg = registry.get_config("whisper-base")
+    slow = dc.replace(STREAMDCIM_BASE, name="sweep-x",
+                      hbm_bytes_per_cycle=STREAMDCIM_BASE.hbm_bytes_per_cycle
+                      // 4)
+    base = compare_modes(cfg, STREAMDCIM_BASE)
+    swept = compare_modes(cfg, slow)
+    for m in ExecutionMode:
+        assert swept[m].hw == "sweep-x"
+        assert swept[m].cycles > base[m].cycles     # quartered HBM hurts
+
+
+def test_plan_block_tiling_reaches_the_simulator():
+    """Non-default block_q/block_kv must flow through workload lowering
+    into the schedulers, keeping predicted == simulated bytes (the 'same
+    object drives both paths' guarantee at any tiling)."""
+    cfg = registry.get_config("vilbert-base")
+    for mode in (EM.TILE_STREAM, EM.LAYER_STREAM):
+        plan = plan_model(cfg, mode=mode, force_mode=True,
+                          block_q=1024, block_kv=1024)
+        res = simulate_plan(plan)
+        for lp in plan.layers[:3]:
+            assert lp.block_q == 1024
+            sim_bytes = res.op_dma_bytes(lp.name)
+            assert sim_bytes == pytest.approx(lp.hbm_bytes, rel=0.10), \
+                (mode, lp.name)
+    # Coarser q-tiling means fewer x_kv re-reads: strictly less traffic.
+    fine = plan_model(cfg, mode=EM.TILE_STREAM, force_mode=True)
+    coarse = plan_model(cfg, mode=EM.TILE_STREAM, force_mode=True,
+                        block_q=1024, block_kv=1024)
+    assert coarse.total_hbm_bytes < fine.total_hbm_bytes
+
+
+def test_ad_hoc_hardware_survives_plan_round_trip():
+    """Plans built from an unregistered HardwareConfig must simulate,
+    re-plan, and serialize — the sweep use case — not KeyError on a
+    preset lookup."""
+    import dataclasses as dc
+    cfg = registry.get_config("whisper-base")
+    custom = dc.replace(STREAMDCIM_BASE, name="custom-x",
+                        rewrite_bus_bits=2048, hbm_bytes_per_cycle=32)
+    plan = plan_model(cfg, hw=custom)
+    assert plan.hw == "custom-x" and plan.hw_config() == custom
+    res = simulate_plan(plan)                      # no KeyError
+    assert res.hw == "custom-x"
+    het = plan.with_layer_modes({0: EM.NON_STREAM})   # re-predicts on custom
+    assert het.layer(0).mode == EM.NON_STREAM
+    restored = ExecutionPlan.from_json(plan.to_json())
+    assert restored.hw_config() == custom
+    assert simulate_plan(restored).cycles == res.cycles
+
+
+def test_traffic_and_rewrite_predictions_tile_consistently():
+    """hbm_bytes and rewrite_cycles must assume the same (ceil) q-block
+    count for non-block-multiple sequences."""
+    from repro.plan import attn_hbm_bytes
+    kw = dict(seq_kv=300, d_kv=512, heads=8, kv_heads=8, head_dim=64)
+    lp = plan_attention(EM.TILE_STREAM, seq_q=300, block_q=256,
+                        block_kv=256, bytes_per_el=1, **kw)
+    # 300/256 -> 2 q-blocks on both sides of the prediction.
+    q_bytes = 300 * 8 * 64
+    assert lp.hbm_bytes == 2 * q_bytes + 2 * 300 * 512
+    assert attn_hbm_bytes(300, 300, 512, 8, 8, 64, EM.TILE_STREAM,
+                          block_q=256, bytes_per_el=1) == lp.hbm_bytes
+    assert lp.rewrite_cycles == 2 * 2 * -(-2 * 256 * 8 * 64 // 64)
+    # A bytes_per_el override must scale bytes AND rewrite cycles together.
+    lp2 = plan_attention(EM.TILE_STREAM, seq_q=300, block_q=256,
+                         block_kv=256, bytes_per_el=2, **kw)
+    assert lp2.hbm_bytes == 2 * lp.hbm_bytes
+    assert lp2.rewrite_cycles == 2 * lp.rewrite_cycles
+
+
+def test_simulate_model_plan_rejects_conflicting_mode():
+    plan = plan_model(registry.get_config("whisper-base"))
+    with pytest.raises(ValueError, match="conflicts"):
+        simulate_model(plan, mode=EM.NON_STREAM)
+
+
+def test_workload_from_plan_matches_config_lowering():
+    """build_workload(plan) reproduces build_workload(cfg) exactly — the
+    plan is a faithful lowering, not a re-derivation."""
+    cfg = registry.get_config("whisper-base")
+    wl_cfg = build_workload(cfg)
+    wl_plan = build_workload(plan_model(cfg))      # plan-aware overload
+    assert wl_plan.name == wl_cfg.name
+    assert len(wl_plan.layers) == len(wl_cfg.layers)
+    for a, b in zip(wl_cfg.layers, wl_plan.layers):
+        assert a == b
+
+
+# ------------------------------------------------- planner-resolved serving
+
+def _dense_cfg(**kw):
+    base = dict(name="t", family=Family.DENSE, num_layers=2, d_model=5120,
+                num_heads=40, num_kv_heads=8, d_ff=64, vocab_size=128,
+                head_dim=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_engine_resolves_mode_through_planner_per_shape():
+    """The PR-2 serving fix: the engine no longer freezes a construction-
+    time mode — each admitted wave's shape goes through the planner."""
+    gqa = _dense_cfg()                             # TILE requested, GQA geom
+    eng = Engine(gqa, params=None, slots=2, max_len=64)
+    assert gqa.execution_mode == EM.TILE_STREAM
+    assert eng.mode_for(48) == EM.LAYER_STREAM     # profitability fallback
+    plan = eng.plan_for(48)
+    assert plan.uniform_mode == EM.LAYER_STREAM
+    assert eng.plan_for(48) is plan                # cached per length
+
+    mha = _dense_cfg(d_model=1024, num_heads=8, num_kv_heads=8)
+    assert Engine(mha, params=None).mode_for(48) == EM.TILE_STREAM
+
+
+def test_engine_accepts_pinned_plan_and_legacy_mode():
+    cfg = _dense_cfg(d_model=1024, num_heads=8, num_kv_heads=8)
+    pinned = plan_model(cfg, seq_len=64, mode=EM.NON_STREAM,
+                        force_mode=True)
+    eng = Engine(cfg, params=None, plan=pinned)
+    assert eng.mode_for(48) == EM.NON_STREAM       # plan wins at any shape
+    legacy = Engine(cfg, params=None, mode=EM.LAYER_STREAM)
+    assert legacy.mode_for(48) == EM.LAYER_STREAM  # deprecated override
+
+
+def test_engine_attention_free_family_has_no_plan():
+    cfg = registry.get_config("mamba2-780m", smoke=True)
+    eng = Engine(cfg, params=None)
+    assert eng.plan_for(32) is None
+    assert eng.mode_for(32) == cfg.execution_mode
+
+
+# ----------------------------------------------------------- plan anatomy
+
+def test_plan_records_cross_forwarding_geometry():
+    """The co-TRM cross-attention layers carry the *other* modality's
+    width as d_kv — the planner decides profitability on the true
+    KV-source width (paper Fig. 4a)."""
+    cfg = registry.get_config("vilbert-base")
+    plan = plan_model(cfg)
+    co = plan.layer("cox0_co")
+    assert co.cross and co.d_q == cfg.d_model and co.d_kv == cfg.d_model_y
+    assert co.mode == EM.TILE_STREAM               # MHA: fusion wins
+    # layers_of addresses a model layer (with_layer_modes' int-key unit):
+    # each co-TRM layer holds 4 attention ops (co + self, both streams).
+    assert co in plan.layers_of(co.layer_index)
+    assert len(plan.layers_of(co.layer_index)) == 4
+    # DTPU prune decision recorded (vilbert ships pruning enabled).
+    assert cfg.pruning.enabled
+    deep = plan.layers[-1]
+    assert deep.keep_tokens < deep.seq_q
+
+
+def test_plan_matches_workload_op_stream():
+    cfg = registry.get_config("qwen2-vl-2b")
+    plan = plan_model(cfg)
+    wl = build_workload(cfg)
+    attn_names = [op.name for _, op in wl.attention_ops]
+    assert [lp.name for lp in plan.layers] == attn_names
+    n_ops = sum(len(l.ops) for l in wl.layers)
+    assert len(plan.layers) + len(plan.gemms) == n_ops
+    for lp in plan.layers:
+        src = next(op for _, op in wl.attention_ops if op.name == lp.name)
+        assert isinstance(src, AttnOp)
+        assert (lp.seq_q, lp.seq_kv, lp.d_q, lp.d_kv) == \
+            (src.seq_q, src.seq_kv, src.d_q, src.d_kv)
