@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-sim bench-sim-json
+.PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -18,3 +18,10 @@ bench-sim:
 # CI smoke: machine-readable report (rows + ExecutionPlan summaries).
 bench-sim-json:
 	$(PYTHON) benchmarks/run.py bench_sim --json bench_sim.json
+
+# Design-space exploration (DESIGN.md §9): full grid / CI-budgeted smoke.
+dse:
+	$(PYTHON) benchmarks/run.py dse --json dse_sweep.json
+
+dse-smoke:
+	$(PYTHON) benchmarks/run.py dse --json dse_sweep.json --points 4

@@ -1,0 +1,71 @@
+"""Design-space exploration section (``run.py dse``) — the ROADMAP's
+multi-macro-group sweep, energy-scored.
+
+Sweeps the default ``repro.dse`` grid (registry presets + num/gen-group
+splits x rewrite-bus widths x ping-pong) over every simulator-supported
+model, then reports per model: the latency/energy Pareto frontier size and
+endpoints, the utilization knee, and the ping-pong EDP win at the base
+design point.  The full machine-readable sweep (every row carrying its
+serialized ``ExecutionPlan``) is registered via ``common.log_dse`` so
+``run.py dse --json`` emits a diffable artifact; ``--points N`` caps the
+design-point budget for CI smoke.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Optional
+
+if __name__ == "__main__":      # allow ``python benchmarks/bench_dse.py``
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+from benchmarks.common import csv_row, log_dse
+
+
+def run(points: Optional[int] = None) -> List[str]:
+    from repro.dse import run_sweep
+    result = run_sweep(points=points)
+    log_dse(result)
+
+    rows: List[str] = []
+    rows.append(csv_row(
+        "dse_grid", 0.0,
+        f"{len(result.rows)} rows ({len(result.models())} models); "
+        f"{len(result.skipped)} invalid combos skipped; "
+        f"energy model {result.energy_model}"))
+    knees = result.knees()
+    for model, seq_len in result.groups():
+        label = result.label(model, seq_len)
+        mrows = result.rows_for(model, seq_len)
+        frontier = result.pareto(model, seq_len)
+        fastest = min(mrows, key=lambda r: r.latency_cycles)
+        frugal = min(mrows, key=lambda r: r.energy_pj)
+        rows.append(csv_row(
+            f"dse_{label}_pareto", 0.0,
+            f"{len(frontier)}/{len(mrows)} non-dominated; fastest "
+            f"{fastest.hw} ({fastest.latency_cycles} cyc); lowest-energy "
+            f"{frugal.hw} ({frugal.energy_pj / 1e6:.1f} uJ)"))
+        knee = knees.get(label)
+        if knee is not None:
+            rows.append(csv_row(
+                f"dse_{label}_knee", 0.0,
+                f"{knee.hw}: {knee.num_macros} macros within "
+                f"{result.knee_tolerance:.0%} of best latency "
+                f"(utilGEN {knee.utilization.get('GEN', 0.0):.2f} "
+                f"utilATTN {knee.utilization.get('ATTN', 0.0):.2f})"))
+        # Ping-pong EDP at the base geometry, if both variants swept.
+        by_hw = {r.hw: r for r in mrows}
+        pp = by_hw.get("streamdcim-base")
+        nopp = by_hw.get("streamdcim-base/pp0")
+        if pp and nopp:
+            rows.append(csv_row(
+                f"dse_{label}_pingpong_edp", 0.0,
+                f"ping-pong EDP {nopp.edp / pp.edp:.2f}x better at "
+                f"base geometry"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

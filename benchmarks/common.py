@@ -6,16 +6,21 @@ from typing import Callable
 
 import jax
 
+from repro.sim.energy import STREAMDCIM_ENERGY_BASE
+
 # v5e roofline constants (same as launch/dryrun.py)
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
-# Energy napkin model (order-of-magnitude; replaces the paper's PrimeTime
-# numbers — DESIGN.md §7): HBM ~5.6 pJ/bit, on-chip ~2 pJ/byte, bf16 MAC.
-E_HBM_PER_BYTE = 45e-12
-E_VMEM_PER_BYTE = 2e-12
-E_PER_FLOP = 0.8e-12
+# Energy napkin constants (order-of-magnitude; replace the paper's
+# PrimeTime numbers — DESIGN.md §7/§9).  Since the `repro.sim.energy`
+# model was calibrated against these, the calibrated model is now the
+# single source of truth; these joule-per-unit names are thin aliases kept
+# so roofline.py / dryrun.py comparisons keep running unchanged.
+E_HBM_PER_BYTE = STREAMDCIM_ENERGY_BASE.pj_per_hbm_byte * 1e-12
+E_VMEM_PER_BYTE = STREAMDCIM_ENERGY_BASE.pj_per_noc_byte * 1e-12
+E_PER_FLOP = STREAMDCIM_ENERGY_BASE.pj_per_flop * 1e-12
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -43,11 +48,21 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
 
 PLAN_LOG: list = []
 
+# The dse section registers its full SweepResult here so ``run.py --json``
+# can attach the machine-readable sweep artifact (rows + plans + pareto).
+DSE_LOG: list = []
+
 
 def log_plan(plan) -> None:
     """Register an ``repro.plan.ExecutionPlan`` for the --json report."""
     PLAN_LOG.append(plan)
 
 
+def log_dse(result) -> None:
+    """Register a ``repro.dse.SweepResult`` for the --json report."""
+    DSE_LOG.append(result)
+
+
 def reset_plan_log() -> None:
     PLAN_LOG.clear()
+    DSE_LOG.clear()

@@ -27,9 +27,11 @@ for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
-def _sections():
-    from benchmarks import (bench_decode, bench_kernels, bench_pruning,
-                            bench_rewrite_overlap, bench_sim,
+def _sections(points=None):
+    import functools
+
+    from benchmarks import (bench_decode, bench_dse, bench_kernels,
+                            bench_pruning, bench_rewrite_overlap, bench_sim,
                             bench_stream_modes, roofline)
     return [
         ("bench_stream_modes", "Fig6/Fig7 stream-mode comparison",
@@ -40,6 +42,8 @@ def _sections():
          bench_rewrite_overlap.run),
         ("bench_sim", "StreamDCIM simulator (three-way + SI stall)",
          bench_sim.run),
+        ("dse", "Design-space exploration (energy/latency Pareto + knee)",
+         functools.partial(bench_dse.run, points=points)),
         ("bench_decode", "Decode regime (tile-stream latency win)",
          bench_decode.run),
         ("bench_kernels", "Kernel micro-benchmarks", bench_kernels.run),
@@ -71,12 +75,15 @@ def main(argv=None) -> None:
                     help="section names to run (default: all)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write a machine-readable JSON report "
-                         "(rows + ExecutionPlan summaries)")
+                         "(rows + ExecutionPlan summaries + DSE sweep)")
+    ap.add_argument("--points", type=int, metavar="N", default=None,
+                    help="design-point budget for the dse section "
+                         "(presets first; CI smoke)")
     ap.add_argument("--list", action="store_true", dest="list_sections",
                     help="print available sections and exit")
     args = ap.parse_args(argv)
 
-    sections = _sections()
+    sections = _sections(points=args.points)
     if args.list_sections:
         for key, title, _ in sections:
             print(f"{key:24s} {title}")
@@ -115,6 +122,8 @@ def main(argv=None) -> None:
 
     if args.json:
         report["plans"] = [p.summary() for p in common.PLAN_LOG]
+        if common.DSE_LOG:
+            report["dse"] = common.DSE_LOG[-1].to_dict()
         report["ok"] = failed == 0
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)

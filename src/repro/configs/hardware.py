@@ -16,6 +16,24 @@ from __future__ import annotations
 import dataclasses
 import math
 
+# Short axis labels for sweep-derived design-point names
+# ("streamdcim-base/g8-gg4-bus1024-pp0"): every sweepable field has one.
+_SWEEP_ABBREV = {
+    "num_groups": "g",
+    "gen_groups": "gg",
+    "macros_per_group": "mpg",
+    "macro_rows": "r",
+    "macro_cols": "c",
+    "input_bits": "ib",
+    "bits_per_cycle": "bpc",
+    "drain_cycles": "dc",
+    "rewrite_bus_bits": "bus",
+    "hbm_bytes_per_cycle": "hbm",
+    "noc_bytes_per_cycle": "noc",
+    "ping_pong": "pp",
+    "act_bytes": "ab",
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareConfig:
@@ -51,7 +69,59 @@ class HardwareConfig:
     gen_groups: int = 2
 
     def __post_init__(self):
-        assert 0 < self.gen_groups < self.num_groups
+        # ValueError (not assert): sweep-constructed design points must fail
+        # loudly even under ``python -O``, and the message must carry the
+        # offending values so a DSE grid error is self-diagnosing.
+        def positive(field: str) -> None:
+            v = getattr(self, field)
+            if v <= 0:
+                raise ValueError(
+                    f"{self.name}: {field} must be > 0, got {v!r}")
+        for field in ("num_groups", "macros_per_group", "macro_rows",
+                      "macro_cols", "input_bits", "bits_per_cycle",
+                      "rewrite_bus_bits", "hbm_bytes_per_cycle",
+                      "noc_bytes_per_cycle", "act_bytes"):
+            positive(field)
+        if self.drain_cycles < 0:
+            raise ValueError(f"{self.name}: drain_cycles must be >= 0, "
+                             f"got {self.drain_cycles!r}")
+        if not 0 < self.gen_groups < self.num_groups:
+            raise ValueError(
+                f"{self.name}: gen_groups must satisfy 0 < gen_groups < "
+                f"num_groups, got gen_groups={self.gen_groups} "
+                f"num_groups={self.num_groups}")
+        if self.rewrite_bus_bits % 8:
+            raise ValueError(
+                f"{self.name}: rewrite_bus_bits must be a multiple of 8 "
+                f"(whole bytes per write-port cycle), got "
+                f"{self.rewrite_bus_bits}")
+
+    # ---------- sweep construction ----------
+
+    @classmethod
+    def sweep(cls, base: "HardwareConfig | None" = None,
+              name: "str | None" = None, **overrides) -> "HardwareConfig":
+        """Build a validated sweep design point: ``base`` (default
+        ``STREAMDCIM_BASE``) with field overrides and a deterministic
+        derived name (``streamdcim-base/g8-gg4-bus1024``) so sweep
+        artifacts and Pareto reports are self-describing.  Validation is
+        the same ``__post_init__`` path every config takes; unknown
+        fields raise ``ValueError`` (a typo'd axis must not silently
+        sweep nothing)."""
+        base = base if base is not None else STREAMDCIM_BASE
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(overrides) - known)
+        if unknown:
+            raise ValueError(f"unknown HardwareConfig sweep field(s) "
+                             f"{unknown}; sweepable: {sorted(known)}")
+        if name is None:
+            order = list(_SWEEP_ABBREV)      # canonical axis order
+            parts = [f"{_SWEEP_ABBREV.get(k, k)}{int(v) if isinstance(v, bool) else v}"
+                     for k, v in sorted(overrides.items(),
+                                        key=lambda kv: order.index(kv[0]))
+                     if getattr(base, k) != v]
+            name = base.name + ("/" + "-".join(parts) if parts else "")
+        return dataclasses.replace(base, name=name, **overrides)
 
     # ---------- derived quantities ----------
 

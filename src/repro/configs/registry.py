@@ -40,6 +40,12 @@ LONG_CONTEXT_OK = {"mamba2-780m", "hymba-1.5b", "h2o-danube3-4b"}
 # repro.configs.hardware.HW_PRESETS — adding a preset updates both names).
 HW_CONFIGS: Dict[str, HardwareConfig] = HW_PRESETS
 
+# Energy-cost design points (same object as repro.sim.energy.ENERGY_PRESETS)
+# for SimResult.energy() / repro.dse sweeps.
+from repro.sim.energy import ENERGY_PRESETS, EnergyModel  # noqa: E402
+
+ENERGY_CONFIGS: Dict[str, EnergyModel] = ENERGY_PRESETS
+
 # Models the simulator's workload lowering supports (the paper's §III pool).
 SIM_ARCHS = ["vilbert-base", "vilbert-large", "qwen2-vl-2b", "whisper-base"]
 
@@ -51,6 +57,10 @@ def get_config(arch: str, smoke: bool = False) -> ModelConfig:
 
 def get_hw_config(name: str) -> HardwareConfig:
     return HW_CONFIGS[name]
+
+
+def get_energy_model(name: str) -> EnergyModel:
+    return ENERGY_CONFIGS[name]
 
 
 def model_module(cfg: ModelConfig):

@@ -1,0 +1,33 @@
+"""``repro.dse`` — energy-aware design-space exploration (DESIGN.md §9).
+
+StreamDCIM's §IV evaluation is one hand-picked design point; the
+architectural claim (tile-based reconfigurable macros + mixed-stationary
+dataflow + ping-pong rewriting) is about *the space* of design points.
+This package sweeps that space: a grid over ``HardwareConfig`` fields
+(``num_groups``/``gen_groups`` splits, ``rewrite_bus_bits``,
+``ping_pong``, any field via ``Axes.extra``) x registry models x shapes,
+each point run through the canonical ``plan_model -> simulate_plan`` path
+and scored with ``repro.sim.energy``.
+
+Artifacts per sweep:
+
+* ``SweepRow``      — latency, HBM bytes, total/per-resource energy, EDP,
+                      per-resource utilization, and the serialized
+                      ``ExecutionPlan`` (replayable: JSON -> ``from_json``
+                      -> ``simulate_plan`` reproduces the row exactly);
+* Pareto frontier   — non-dominated (latency, energy) rows per model;
+* utilization knee  — the smallest design point within 10% of the best
+                      latency per model (ROADMAP §Simulator).
+
+Entry points: ``python -m repro.dse`` and ``benchmarks/run.py dse``
+(``--json`` artifact, ``--points N`` budget for CI smoke).
+"""
+from repro.dse.sweep import (Axes, DEFAULT_AXES, SweepResult, SweepRow,
+                             dominates, grid_points, pareto_frontier,
+                             run_sweep, simulate_point, utilization_knee)
+
+__all__ = [
+    "Axes", "DEFAULT_AXES", "SweepResult", "SweepRow", "dominates",
+    "grid_points", "pareto_frontier", "run_sweep", "simulate_point",
+    "utilization_knee",
+]

@@ -1,0 +1,83 @@
+"""CLI for ``repro.dse``: ``PYTHONPATH=src python -m repro.dse``.
+
+Prints a per-model sweep table (design point, latency, energy, EDP, macro
+utilization; Pareto members starred, the utilization knee marked) and
+optionally writes the full machine-readable sweep — rows with serialized
+plans, frontier indices, knees — with ``--json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.dse.sweep import DEFAULT_AXES, run_sweep
+from repro.sim.energy import ENERGY_PRESETS
+
+
+def format_table(result, model: str, seq_len: int, knees=None) -> str:
+    knees = result.knees() if knees is None else knees
+    rows = result.rows_for(model, seq_len)
+    frontier = set(id(r) for r in result.pareto(model, seq_len))
+    knee = knees.get(result.label(model, seq_len))
+    lines = [f"== {result.label(model, seq_len)} ({len(rows)} points, "
+             f"energy model {result.energy_model}) ==",
+             f"{'':2s}{'design point':<42s} {'cycles':>12s} {'energy(uJ)':>11s} "
+             f"{'EDP':>10s} {'utilGEN':>8s} {'utilATTN':>9s}"]
+    for r in sorted(rows, key=lambda r: r.latency_cycles):
+        mark = "*" if id(r) in frontier else " "
+        mark += "K" if knee is not None and r is knee else " "
+        lines.append(
+            f"{mark:2s}{r.hw:<42.42s} {r.latency_cycles:>12d} "
+            f"{r.energy_pj / 1e6:>11.1f} {r.edp:>10.2e} "
+            f"{r.utilization.get('GEN', 0.0):>8.2f} "
+            f"{r.utilization.get('ATTN', 0.0):>9.2f}")
+    if knee is not None:
+        lines.append(f"   knee: {knee.hw} ({knee.num_macros} macros, "
+                     f"within {result.knee_tolerance:.0%} of best latency)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dse",
+        description="StreamDCIM design-space exploration sweep")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="registry arch names (default: simulator pool)")
+    ap.add_argument("--points", type=int, default=None,
+                    help="design-point budget (presets first; CI smoke)")
+    ap.add_argument("--seq", type=int, nargs="*", default=[0],
+                    help="sequence lengths (0 = model default)")
+    ap.add_argument("--energy", default="streamdcim-energy-base",
+                    choices=sorted(ENERGY_PRESETS),
+                    help="energy model preset")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full sweep artifact (rows + plans + "
+                         "pareto + knees)")
+    args = ap.parse_args(argv)
+
+    done = [0]
+
+    def progress(row):
+        done[0] += 1
+        print(f"\r  {done[0]} points simulated", end="", file=sys.stderr)
+
+    result = run_sweep(models=args.models, axes=DEFAULT_AXES,
+                       points=args.points, seq_lens=args.seq,
+                       energy_model=ENERGY_PRESETS[args.energy],
+                       progress=progress)
+    print(file=sys.stderr)
+    knees = result.knees()
+    for model, seq_len in result.groups():
+        print(format_table(result, model, seq_len, knees=knees))
+        print()
+    if result.skipped:
+        print(f"# {len(result.skipped)} invalid grid combinations skipped")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result.to_dict(), f, indent=2)
+        print(f"# sweep artifact -> {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

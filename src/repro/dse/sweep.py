@@ -1,0 +1,319 @@
+"""The DSE sweep engine: (HardwareConfig grid) x (models) x (shapes).
+
+Every point runs the canonical compile->plan->simulate path
+(``plan_model`` -> ``simulate_plan``) and is recorded as one ``SweepRow``
+carrying latency, total/per-resource energy, EDP, per-resource
+utilization, and the serialized ``ExecutionPlan`` — the plan JSON is the
+replay artifact: feeding it back through ``ExecutionPlan.from_json`` ->
+``simulate_plan`` reproduces the row's latency and energy exactly
+(test-pinned), so a frontier point found in a sweep can always be
+re-examined at full trace fidelity.
+
+Grid semantics: design points are ``HardwareConfig.sweep`` products over
+``Axes`` (paired ``groups`` splits so ``gen_groups < num_groups`` holds by
+construction, plus independent axes); combinations the validator rejects
+are recorded in ``SweepResult.skipped``, never silently dropped.  The
+registry presets always lead the point list, so a ``--points N`` budget
+(CI smoke) still covers the named designs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.configs.hardware import HardwareConfig
+from repro.sim.energy import EnergyModel, STREAMDCIM_ENERGY_BASE
+
+
+# ---------------------------------------------------------------------------
+# Grid definition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """One sweep grid over ``HardwareConfig`` fields.
+
+    ``groups`` pairs ``(num_groups, gen_groups)`` because the two fields
+    are constrained together (the mixed-stationary split); the remaining
+    axes are independent.  ``extra`` admits any other config field
+    (``macros_per_group``, ``noc_bytes_per_cycle``, ...) by name.
+    """
+
+    groups: Tuple[Tuple[int, int], ...] = ((2, 1), (4, 1), (4, 2),
+                                           (8, 2), (8, 4))
+    rewrite_bus_bits: Tuple[int, ...] = (512, 2048)
+    ping_pong: Tuple[bool, ...] = (True, False)
+    extra: Mapping[str, Tuple[object, ...]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        clash = sorted(set(self.extra)
+                       & {"num_groups", "gen_groups", "rewrite_bus_bits",
+                          "ping_pong"})
+        if clash:
+            raise ValueError(
+                f"extra axes {clash} collide with built-in Axes fields — "
+                "set them on the Axes itself (groups pairs num_groups "
+                "with gen_groups)")
+
+    def overrides(self) -> Iterable[Dict[str, object]]:
+        """Yield one override dict per grid combination."""
+        extra_keys = sorted(self.extra)
+        extra_vals = [self.extra[k] for k in extra_keys]
+        for (ng, gg), bus, pp, *ev in itertools.product(
+                self.groups, self.rewrite_bus_bits, self.ping_pong,
+                *extra_vals):
+            ov: Dict[str, object] = {"num_groups": ng, "gen_groups": gg,
+                                     "rewrite_bus_bits": bus,
+                                     "ping_pong": pp}
+            ov.update(zip(extra_keys, ev))
+            yield ov
+
+
+DEFAULT_AXES = Axes()
+
+
+def grid_points(base: Optional[HardwareConfig] = None,
+                axes: Axes = DEFAULT_AXES,
+                presets: Sequence[HardwareConfig] = (),
+                ) -> Tuple[List[HardwareConfig], List[Dict[str, object]]]:
+    """Materialize the design-point list: ``presets`` first (dedup'd by
+    parameters), then the validated grid.  Returns (points, skipped) where
+    each skipped record carries the overrides and the validator's reason."""
+    points: List[HardwareConfig] = []
+    seen = set()
+
+    def key(hw: HardwareConfig):
+        d = dataclasses.asdict(hw)
+        d.pop("name")
+        return tuple(sorted(d.items()))
+
+    for hw in presets:
+        if key(hw) not in seen:
+            seen.add(key(hw))
+            points.append(hw)
+    skipped: List[Dict[str, object]] = []
+    for ov in axes.overrides():
+        try:
+            hw = HardwareConfig.sweep(base, **ov)
+        except ValueError as e:
+            skipped.append({"overrides": ov, "reason": str(e)})
+            continue
+        if key(hw) not in seen:
+            seen.add(key(hw))
+            points.append(hw)
+    return points, skipped
+
+
+# ---------------------------------------------------------------------------
+# Sweep rows / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepRow:
+    """One simulated (design point, model, shape) record."""
+
+    model: str
+    seq_len: int              # 0 = the model's paper-typical default
+    hw: str
+    hw_params: Mapping[str, object]
+    energy_model: str
+    latency_cycles: int
+    hbm_bytes: int
+    energy_pj: float
+    edp: float                # energy_pj * latency_cycles
+    utilization: Mapping[str, float]
+    energy_by_resource: Mapping[str, float]
+    plan_json: str            # ExecutionPlan.to_json() — the replay artifact
+
+    @property
+    def num_macros(self) -> int:
+        return (int(self.hw_params["num_groups"])
+                * int(self.hw_params["macros_per_group"]))
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["utilization"] = dict(self.utilization)
+        d["energy_by_resource"] = dict(self.energy_by_resource)
+        d["hw_params"] = dict(self.hw_params)
+        d["num_macros"] = self.num_macros
+        return d
+
+
+def pareto_frontier(rows: Sequence[SweepRow]) -> List[SweepRow]:
+    """Non-dominated rows under (latency_cycles, energy_pj) minimization:
+    a row survives unless some other row is <= on both metrics and < on at
+    least one.  Single pass over the latency-sorted list (skyline sweep);
+    rows tied on *both* metrics are all non-dominated (``dominates``
+    requires one strict inequality) and all kept — equal-cost points sort
+    adjacent, so an exact tie with the last frontier member is the only
+    tie case."""
+    ordered = sorted(rows, key=lambda r: (r.latency_cycles, r.energy_pj))
+    frontier: List[SweepRow] = []
+    best: Optional[Tuple[int, float]] = None    # last frontier (lat, pj)
+    for r in ordered:
+        cost = (r.latency_cycles, r.energy_pj)
+        if best is None or r.energy_pj < best[1] or cost == best:
+            frontier.append(r)
+            best = cost
+    return frontier
+
+
+def dominates(a: SweepRow, b: SweepRow) -> bool:
+    """True if ``a`` Pareto-dominates ``b`` on (latency, energy)."""
+    return (a.latency_cycles <= b.latency_cycles
+            and a.energy_pj <= b.energy_pj
+            and (a.latency_cycles < b.latency_cycles
+                 or a.energy_pj < b.energy_pj))
+
+
+def utilization_knee(rows: Sequence[SweepRow],
+                     tolerance: float = 0.10) -> Optional[SweepRow]:
+    """The ROADMAP's per-model utilization knee: the *smallest* design
+    point (fewest total macros, ties broken by lower energy) whose latency
+    is within ``tolerance`` of the best latency any point achieves —
+    i.e. where adding macro groups stops buying speed and only dilutes
+    utilization.  Returns None for an empty row set."""
+    if not rows:
+        return None
+    best = min(r.latency_cycles for r in rows)
+    eligible = [r for r in rows
+                if r.latency_cycles <= (1.0 + tolerance) * best]
+    return min(eligible, key=lambda r: (r.num_macros, r.energy_pj))
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """All rows of one sweep plus the derived artifacts."""
+
+    rows: List[SweepRow]
+    skipped: List[Dict[str, object]]
+    energy_model: str
+    knee_tolerance: float = 0.10
+
+    def models(self) -> List[str]:
+        seen: List[str] = []
+        for r in self.rows:
+            if r.model not in seen:
+                seen.append(r.model)
+        return seen
+
+    def groups(self) -> List[Tuple[str, int]]:
+        """The comparison units: (model, seq_len) pairs in row order.
+        Frontier and knee extraction never mix shapes — the same design
+        point at a shorter sequence would spuriously 'dominate' its
+        longer-sequence twin, exactly like mixing models would."""
+        seen: List[Tuple[str, int]] = []
+        for r in self.rows:
+            key = (r.model, r.seq_len)
+            if key not in seen:
+                seen.append(key)
+        return seen
+
+    def label(self, model: str, seq_len: int) -> str:
+        """Group label for reports: just the model name when one shape
+        was swept, ``model@seqN`` when several disambiguate."""
+        multi = len({s for m, s in self.groups() if m == model}) > 1
+        return f"{model}@seq{seq_len}" if multi else model
+
+    def rows_for(self, model: str,
+                 seq_len: Optional[int] = None) -> List[SweepRow]:
+        return [r for r in self.rows if r.model == model
+                and (seq_len is None or r.seq_len == seq_len)]
+
+    def pareto(self, model: Optional[str] = None,
+               seq_len: Optional[int] = None) -> List[SweepRow]:
+        """Latency/energy frontier, computed per (model, seq_len) group
+        and concatenated in group order over whatever ``model`` /
+        ``seq_len`` leave unfixed."""
+        out: List[SweepRow] = []
+        for m, s in self.groups():
+            if (model is None or m == model) \
+                    and (seq_len is None or s == seq_len):
+                out.extend(pareto_frontier(self.rows_for(m, s)))
+        return out
+
+    def knees(self) -> Dict[str, SweepRow]:
+        out: Dict[str, SweepRow] = {}
+        for m, s in self.groups():
+            knee = utilization_knee(self.rows_for(m, s),
+                                    self.knee_tolerance)
+            if knee is not None:
+                out[self.label(m, s)] = knee
+        return out
+
+    def to_dict(self) -> Dict[str, object]:
+        # Frontier members ARE entries of self.rows: index by identity
+        # (value-equality .index() would deep-compare plan JSON, O(rows^2)).
+        index_of = {id(r): i for i, r in enumerate(self.rows)}
+        pareto_ids = {self.label(m, s):
+                      [index_of[id(r)]
+                       for r in pareto_frontier(self.rows_for(m, s))]
+                      for m, s in self.groups()}
+        return {
+            "energy_model": self.energy_model,
+            "num_rows": len(self.rows),
+            "rows": [r.to_dict() for r in self.rows],
+            "skipped": list(self.skipped),
+            "pareto": pareto_ids,       # row indices, per (model, shape)
+            "knees": {m: r.to_dict() for m, r in self.knees().items()},
+            "knee_tolerance": self.knee_tolerance,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The sweep driver
+# ---------------------------------------------------------------------------
+
+def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
+                   energy_model: Optional[EnergyModel] = None) -> SweepRow:
+    """One (model config, design point, shape) evaluation through the
+    canonical path: ``plan_model`` -> ``simulate_plan`` -> energy fold."""
+    from repro.plan.planner import plan_model
+    from repro.sim.pipeline import simulate_plan
+    em = energy_model or STREAMDCIM_ENERGY_BASE
+    plan = plan_model(cfg, hw=hw, seq_len=seq_len)
+    res = simulate_plan(plan, hw=hw)
+    rep = res.energy(em)
+    return SweepRow(
+        model=cfg.name, seq_len=seq_len, hw=hw.name,
+        hw_params=dataclasses.asdict(hw), energy_model=em.name,
+        latency_cycles=res.cycles, hbm_bytes=res.hbm_bytes,
+        energy_pj=rep.total_pj, edp=rep.edp,
+        utilization=res.trace.utilizations(),
+        energy_by_resource=dict(rep.by_resource),
+        plan_json=plan.to_json())
+
+
+def run_sweep(models: Optional[Sequence[str]] = None,
+              base: Optional[HardwareConfig] = None,
+              axes: Axes = DEFAULT_AXES,
+              points: Optional[int] = None,
+              seq_lens: Sequence[int] = (0,),
+              energy_model: Optional[EnergyModel] = None,
+              include_presets: bool = True,
+              knee_tolerance: float = 0.10,
+              progress=None) -> SweepResult:
+    """Run the grid.  ``models`` are registry arch names (default: the
+    simulator-supported pool); ``points`` caps the number of *design
+    points* (the per-model row count follows), presets first so a small
+    budget still sweeps the named configs."""
+    from repro.configs import registry
+    em = energy_model or STREAMDCIM_ENERGY_BASE
+    model_names = list(models) if models else list(registry.SIM_ARCHS)
+    presets = tuple(registry.HW_CONFIGS.values()) if include_presets else ()
+    hw_points, skipped = grid_points(base, axes, presets)
+    if points is not None:
+        hw_points = hw_points[:max(points, 0)]
+    rows: List[SweepRow] = []
+    for name in model_names:
+        cfg = registry.get_config(name)
+        for seq in seq_lens:
+            for hw in hw_points:
+                row = simulate_point(cfg, hw, seq_len=seq, energy_model=em)
+                rows.append(row)
+                if progress is not None:
+                    progress(row)
+    return SweepResult(rows=rows, skipped=skipped, energy_model=em.name,
+                       knee_tolerance=knee_tolerance)

@@ -23,7 +23,12 @@ Module map
                  (NON_STREAM, LAYER_STREAM) and the §I rewrite-stall
                  micro-simulation (§II-C / §I).
 ``trace.py``     Per-tile event traces; utilization, latency, DMA-byte
-                 and rewrite-stall summaries.
+                 and rewrite-stall summaries (cached aggregates — DSE
+                 sweeps summarize thousands of traces).
+``energy.py``    Napkin energy model: ``EnergyModel`` pJ-cost tables
+                 folded over traces into per-resource/per-op breakdowns,
+                 total pJ and EDP (``SimResult.energy()``); presets in
+                 ``repro.configs.registry.ENERGY_CONFIGS``.
 ``workload.py``  Lowers ``ModelConfig``s (ViLBERT-base/large co-TRM,
                  whisper enc-dec, qwen2-vl / dense decoders) — or
                  ``repro.plan.ExecutionPlan``s directly
@@ -39,12 +44,19 @@ plans internally for the legacy config-first signatures.
 Hardware design points live in ``repro.configs.hardware`` and are
 registered in ``repro.configs.registry.HW_CONFIGS``.
 
-Out of scope (ROADMAP §Simulator): energy model, decode-step workloads,
-DTPU pruning interaction, multi-macro-group sweeps, plan/trace replay.
+Design-space exploration over (HardwareConfig x EnergyModel x model)
+grids lives in ``repro.dse``, which drives ``plan_model -> simulate_plan``
+per point and reads ``SimResult.energy()`` here.
+
+Out of scope (ROADMAP §Simulator): decode-step workloads, DTPU pruning
+interaction, plan/trace replay.
 """
 from repro.configs.hardware import (HW_PRESETS, HardwareConfig,
                                     STREAMDCIM_BASE, STREAMDCIM_SMALL,
                                     STREAMDCIM_WIDEBUS)
+from repro.sim.energy import (ENERGY_PRESETS, EnergyModel, EnergyReport,
+                              STREAMDCIM_ENERGY_BASE, energy_of,
+                              energy_of_trace)
 from repro.sim.macro import MacroArray, MacroMode
 from repro.sim.pipeline import (SimResult, compare_modes, simulate,
                                 simulate_model, simulate_plan,
@@ -55,8 +67,9 @@ from repro.sim.workload import (AttnOp, GemmOp, Layer, Workload,
 
 __all__ = [
     "HW_PRESETS", "HardwareConfig", "STREAMDCIM_BASE", "STREAMDCIM_SMALL",
-    "STREAMDCIM_WIDEBUS", "MacroArray", "MacroMode", "SimResult",
-    "compare_modes", "simulate", "simulate_model", "simulate_plan",
-    "simulate_rewrite_stall", "Event", "Trace", "AttnOp", "GemmOp", "Layer",
-    "Workload", "build_workload", "workload_from_plan",
+    "STREAMDCIM_WIDEBUS", "ENERGY_PRESETS", "EnergyModel", "EnergyReport",
+    "STREAMDCIM_ENERGY_BASE", "energy_of", "energy_of_trace", "MacroArray",
+    "MacroMode", "SimResult", "compare_modes", "simulate", "simulate_model",
+    "simulate_plan", "simulate_rewrite_stall", "Event", "Trace", "AttnOp",
+    "GemmOp", "Layer", "Workload", "build_workload", "workload_from_plan",
 ]

@@ -134,7 +134,7 @@ def cross_forward_attention(eng: Engine, hw: HardwareConfig, op: AttnOp,
             rw_res = "BUS" if attn.overlap_rewrite else "ATTN"
             rw = eng.task("rewrite", rw_res,
                           attn.rewrite_cycles(kv_tile_bytes), rw_deps,
-                          tag=f"{tag}:rw:q{i}k{j}")
+                          nbytes=kv_tile_bytes, tag=f"{tag}:rw:q{i}k{j}")
             # QK^T + PV for this tile; online softmax keeps tiles in-order.
             c_deps = [rw, qdma] + compute_hist[-1:]
             comp = eng.task(

@@ -48,11 +48,24 @@ class SimResult:
     hbm_bytes: int
     layer_cycles: Tuple[int, ...]
     trace: Trace
+    # The actual design point simulated (not just its name), so ad-hoc
+    # sweep configs get correct energy scaling without a preset lookup.
+    hw_cfg: Optional[HardwareConfig] = None
 
     def op_dma_bytes(self, op_name: str) -> int:
         """Simulated HBM bytes attributed to one op (tag prefix match)."""
         return self.trace.bytes_moved(
             "HBM", pred=lambda e: e.tag.startswith(op_name + ":"))
+
+    def energy(self, model=None):
+        """Fold an ``repro.sim.energy.EnergyModel`` (default
+        ``STREAMDCIM_ENERGY_BASE``) over this run's trace."""
+        from repro.sim.energy import energy_of
+        return energy_of(self, model=model)
+
+    def edp(self, model=None) -> float:
+        """Energy-delay product, pJ * cycles (DESIGN.md §9)."""
+        return self.energy(model).edp
 
 
 class _Scheduler:
@@ -140,6 +153,7 @@ class _LayerStream(_Scheduler):
                 # No shadow sub-array: the rewrite occupies the macro array.
                 rw = eng.task("rewrite", "ATTN",
                               self.attn.rewrite_cycles(kv_tile_bytes), [rd],
+                              nbytes=kv_tile_bytes,
                               tag=f"{op.name}:rw:q{i}k{j}")
                 comp = eng.task("compute", "ATTN",
                                 2 * self.attn.gemm_cycles(
@@ -215,7 +229,8 @@ class _NonStream(_Scheduler):
         t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, k_bytes),
                         k_bytes, f"{n}:kvdma:readk")
         t = self._chain(eng, t, "rewrite", "ATTN",
-                        self.attn.rewrite_cycles(k_bytes), 0, f"{n}:rwk")
+                        self.attn.rewrite_cycles(k_bytes), k_bytes,
+                        f"{n}:rwk")
         t = self._chain(eng, t, "compute", "ATTN",
                         self.attn.gemm_cycles(op.seq_q, op.head_dim,
                                               op.seq_kv, count=op.heads),
@@ -233,7 +248,8 @@ class _NonStream(_Scheduler):
         t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, k_bytes),
                         k_bytes, f"{n}:kvdma:readv")
         t = self._chain(eng, t, "rewrite", "ATTN",
-                        self.attn.rewrite_cycles(k_bytes), 0, f"{n}:rwv")
+                        self.attn.rewrite_cycles(k_bytes), k_bytes,
+                        f"{n}:rwv")
         t = self._chain(eng, t, "compute", "ATTN",
                         self.attn.gemm_cycles(op.seq_q, op.seq_kv,
                                               op.head_dim, count=op.heads),
@@ -275,7 +291,7 @@ def _simulate_ops(wl: Workload, hw: HardwareConfig, sched_for_op,
     bounds = [0] + [finish[m] for m in layer_marks]
     per_layer = tuple(b - a for a, b in zip(bounds, bounds[1:]))
     return SimResult(wl.name, mode, hw.name, trace.makespan,
-                     trace.bytes_moved("HBM"), per_layer, trace)
+                     trace.bytes_moved("HBM"), per_layer, trace, hw_cfg=hw)
 
 
 def simulate(wl: Workload, hw: HardwareConfig,
@@ -360,7 +376,8 @@ def simulate_rewrite_stall(hw: HardwareConfig = STREAMDCIM_BASE,
     for it in range(iters):
         deps = comps[-1:] if not arr.overlap_rewrite else comps[-2:-1]
         res = "ATTN" if not arr.overlap_rewrite else "BUS"
-        rw = eng.task("rewrite", res, rw_cycles, deps, tag=f"it{it}:rw")
+        rw = eng.task("rewrite", res, rw_cycles, deps, nbytes=n * d,
+                      tag=f"it{it}:rw")
         comp = eng.task("compute", "ATTN", comp_cycles,
                         [rw] + comps[-1:], tag=f"it{it}:qk")
         comps.append(comp)

@@ -6,12 +6,18 @@ interval, byte count (for DMA/NoC/rewrite events) and a free-form tag
 benchmarks and tests consume: makespan, per-resource busy cycles and
 utilization, DMA bytes (optionally filtered by op class), and the rewrite
 stall fraction that reproduces the paper's §I analysis.
+
+Reductions are served from a cached single-pass aggregate (rebuilt lazily,
+invalidated by ``add``): a DSE sweep (``repro.dse``) summarizes thousands
+of simulated traces, so per-call O(events) scans would go quadratic.
+The energy fold (``repro.sim.energy``) reads the cached makespan and does
+its own single event pass (per-op attribution needs per-event costs).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,24 +34,78 @@ class Event:
     def cycles(self) -> int:
         return self.end - self.start
 
+    @property
+    def op(self) -> str:
+        """First tag segment: the op this event belongs to."""
+        return self.tag.split(":", 1)[0]
+
+
+@dataclasses.dataclass
+class _Aggregates:
+    """One-pass reduction over the event list (see ``Trace._agg``)."""
+
+    makespan: int = 0
+    busy: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bytes_by_resource: Dict[str, int] = dataclasses.field(default_factory=dict)
+    rewrite_cycles: int = 0
+    compute_cycles: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dma_by_op: Dict[str, int] = dataclasses.field(default_factory=dict)
+
 
 class Trace:
-    """Append-only event log with summary reductions."""
+    """Append-only event log with cached summary reductions."""
 
     def __init__(self) -> None:
-        self.events: List[Event] = []
+        self.events: list[Event] = []
+        self._agg: Optional[_Aggregates] = None
+        self._agg_n = -1              # event count the cache was built at
 
     def add(self, ev: Event) -> None:
         self.events.append(ev)
+        self._agg = None              # invalidate cached aggregates
 
-    # ---------- reductions ----------
+    @property
+    def aggregates(self) -> _Aggregates:
+        # Rebuilt lazily; the count check also catches direct
+        # ``trace.events.append`` (events are frozen, so append is the
+        # only way the list changes).
+        if self._agg is None or self._agg_n != len(self.events):
+            self._agg = self._reduce()
+            self._agg_n = len(self.events)
+        return self._agg
+
+    def _reduce(self) -> _Aggregates:
+        a = _Aggregates()
+        busy = defaultdict(int)
+        nbytes = defaultdict(int)
+        comp = defaultdict(int)
+        dma = defaultdict(int)
+        for e in self.events:
+            if e.end > a.makespan:
+                a.makespan = e.end
+            cyc = e.end - e.start
+            busy[e.resource] += cyc
+            nbytes[e.resource] += e.bytes
+            if e.kind == "rewrite":
+                a.rewrite_cycles += cyc
+            elif e.kind == "compute":
+                comp[e.resource] += cyc
+            if e.resource == "HBM":
+                dma[e.op] += e.bytes
+        a.busy = dict(busy)
+        a.bytes_by_resource = dict(nbytes)
+        a.compute_cycles = dict(comp)
+        a.dma_by_op = dict(dma)
+        return a
+
+    # ---------- reductions (cache-served) ----------
 
     @property
     def makespan(self) -> int:
-        return max((e.end for e in self.events), default=0)
+        return self.aggregates.makespan
 
     def busy_cycles(self, resource: str) -> int:
-        return sum(e.cycles for e in self.events if e.resource == resource)
+        return self.aggregates.busy.get(resource, 0)
 
     def utilization(self, resource: str) -> float:
         span = self.makespan
@@ -53,31 +113,35 @@ class Trace:
 
     def bytes_moved(self, resource: str = "HBM",
                     pred: Optional[Callable[[Event], bool]] = None) -> int:
+        if pred is None:
+            return self.aggregates.bytes_by_resource.get(resource, 0)
         return sum(e.bytes for e in self.events
-                   if e.resource == resource and (pred is None or pred(e)))
+                   if e.resource == resource and pred(e))
 
     def dma_bytes_by_op(self) -> Dict[str, int]:
         """HBM bytes keyed by the op field (first tag segment)."""
-        out: Dict[str, int] = defaultdict(int)
-        for e in self.events:
-            if e.resource == "HBM":
-                out[e.tag.split(":", 1)[0]] += e.bytes
-        return dict(out)
+        return dict(self.aggregates.dma_by_op)
 
     def rewrite_stall_fraction(self, compute_resource: str = "ATTN") -> float:
         """Paper §I metric: rewrite cycles / (rewrite + compute) cycles on
         the attention macro array.  Under serial scheduling this is the
         stall fraction; under ping-pong it is just the overlap ratio."""
-        rw = sum(e.cycles for e in self.events if e.kind == "rewrite")
-        comp = sum(e.cycles for e in self.events
-                   if e.resource == compute_resource and e.kind == "compute")
+        a = self.aggregates
+        rw = a.rewrite_cycles
+        comp = a.compute_cycles.get(compute_resource, 0)
         return rw / (rw + comp) if rw + comp else 0.0
 
+    def utilizations(self) -> Dict[str, float]:
+        """Per-resource utilization for every resource seen in the trace."""
+        span = self.makespan
+        return {r: (b / span if span else 0.0)
+                for r, b in sorted(self.aggregates.busy.items())}
+
     def summary(self) -> Dict[str, float]:
-        resources = sorted({e.resource for e in self.events})
-        s: Dict[str, float] = {"makespan_cycles": float(self.makespan)}
-        for r in resources:
-            s[f"busy_{r}"] = float(self.busy_cycles(r))
+        a = self.aggregates
+        s: Dict[str, float] = {"makespan_cycles": float(a.makespan)}
+        for r in sorted(a.busy):
+            s[f"busy_{r}"] = float(a.busy[r])
             s[f"util_{r}"] = self.utilization(r)
         s["hbm_bytes"] = float(self.bytes_moved("HBM"))
         s["rewrite_stall_frac"] = self.rewrite_stall_fraction()

@@ -1,0 +1,210 @@
+"""repro.dse — design-space exploration tests (ISSUE-3 acceptance).
+
+Pins the sweep-row contract (latency/energy/EDP/utilization/plan per
+row), Pareto and knee extraction, the HardwareConfig.sweep validation
+path, the base-not-dominated-by-small acceptance criterion, and the
+replay guarantee: a frontier row's serialized plan re-simulated through
+``simulate_plan`` reproduces its latency and energy exactly.
+"""
+import json
+
+import pytest
+
+from repro.configs import registry
+from repro.configs.hardware import (HW_PRESETS, HardwareConfig,
+                                    STREAMDCIM_BASE)
+from repro.dse import (Axes, SweepRow, dominates, grid_points,
+                       pareto_frontier, run_sweep, simulate_point,
+                       utilization_knee)
+from repro.plan.planner import ExecutionPlan
+from repro.sim import simulate_plan
+
+SEQ = 1024          # short sequences keep the swept points fast
+
+SMALL_AXES = Axes(groups=((2, 1), (4, 2), (8, 4)),
+                  rewrite_bus_bits=(512,), ping_pong=(True,))
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    return run_sweep(models=["vilbert-base", "whisper-base"],
+                     axes=SMALL_AXES, seq_lens=(SEQ,),
+                     include_presets=False)
+
+
+# -------------------------------------------------------- sweep construction
+
+def test_sweep_constructor_validates_like_post_init():
+    with pytest.raises(ValueError, match="gen_groups"):
+        HardwareConfig.sweep(num_groups=2, gen_groups=3)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        HardwareConfig.sweep(rewrite_bus_bits=100)
+    with pytest.raises(ValueError, match="num_groups must be > 0"):
+        HardwareConfig.sweep(num_groups=0, gen_groups=0)
+    with pytest.raises(ValueError, match="unknown"):
+        HardwareConfig.sweep(nmu_groups=8)
+
+
+def test_sweep_constructor_derives_deterministic_names():
+    hw = HardwareConfig.sweep(num_groups=8, gen_groups=4,
+                              rewrite_bus_bits=1024)
+    assert hw.name == "streamdcim-base/g8-gg4-bus1024"
+    # overrides equal to the base are elided from the name
+    assert HardwareConfig.sweep(ping_pong=True).name == "streamdcim-base"
+    assert HardwareConfig.sweep(ping_pong=False).name == "streamdcim-base/pp0"
+
+
+def test_grid_points_presets_first_and_deduped():
+    import dataclasses
+
+    points, skipped = grid_points(presets=tuple(HW_PRESETS.values()))
+    names = [p.name for p in points]
+    assert names[:3] == list(HW_PRESETS)
+
+    # the (4,2,512,pp) grid combo IS streamdcim-base: deduped, not repeated
+    def params(p):
+        d = dataclasses.asdict(p)
+        d.pop("name")
+        return tuple(sorted(d.items()))
+    assert len({params(p) for p in points}) == len(points)
+    assert not skipped
+
+
+def test_extra_axes_reject_builtin_collisions():
+    with pytest.raises(ValueError, match="collide"):
+        Axes(groups=((8, 4),), extra={"num_groups": (2,)})
+    # genuinely extra fields pass through to the grid
+    axes = Axes(groups=((4, 2),), rewrite_bus_bits=(512,),
+                ping_pong=(True,), extra={"macros_per_group": (8, 16)})
+    assert [ov["macros_per_group"] for ov in axes.overrides()] == [8, 16]
+
+
+def test_grid_points_skip_invalid_combos_with_reason():
+    axes = Axes(groups=((2, 1), (2, 2)), rewrite_bus_bits=(512,),
+                ping_pong=(True,))
+    points, skipped = grid_points(axes=axes)
+    assert len(points) == 1 and len(skipped) == 1
+    assert "gen_groups" in skipped[0]["reason"]
+
+
+# ------------------------------------------------------------- sweep rows
+
+def test_sweep_rows_carry_full_record(sweep):
+    assert len(sweep.rows) == 2 * 3          # 2 models x 3 design points
+    for row in sweep.rows:
+        assert row.latency_cycles > 0
+        assert row.energy_pj > 0
+        assert row.edp == pytest.approx(row.energy_pj * row.latency_cycles)
+        assert 0.0 < row.utilization["ATTN"] <= 1.0
+        assert sum(row.energy_by_resource.values()) == pytest.approx(
+            row.energy_pj)
+        plan = ExecutionPlan.from_json(row.plan_json)
+        assert plan.model == row.model
+        d = row.to_dict()
+        json.dumps(d)                        # artifact must be serializable
+        assert d["num_macros"] == row.num_macros
+
+
+def test_pareto_frontier_nonempty_and_nondominated(sweep):
+    for model in sweep.models():
+        frontier = sweep.pareto(model)
+        rows = sweep.rows_for(model)
+        assert frontier
+        for f in frontier:
+            assert not any(dominates(r, f) for r in rows)
+        # every non-frontier row is dominated by some frontier row
+        for r in rows:
+            if r not in frontier:
+                assert any(dominates(f, r) for f in frontier)
+
+
+def test_utilization_knee_definition(sweep):
+    rows = sweep.rows_for("vilbert-base")
+    knee = utilization_knee(rows, tolerance=0.10)
+    best = min(r.latency_cycles for r in rows)
+    assert knee.latency_cycles <= 1.10 * best
+    # no smaller design point is also within tolerance
+    for r in rows:
+        if r.num_macros < knee.num_macros:
+            assert r.latency_cycles > 1.10 * best
+    assert utilization_knee([]) is None
+    # infinite tolerance admits everything -> smallest array wins
+    loose = utilization_knee(rows, tolerance=float("inf"))
+    assert loose.num_macros == min(r.num_macros for r in rows)
+
+
+def test_frontier_row_replays_exactly(sweep):
+    """Acceptance: plan_json -> from_json -> simulate_plan reproduces the
+    frontier row's latency and energy bit-for-bit."""
+    row = sweep.pareto("vilbert-base")[0]
+    plan = ExecutionPlan.from_json(row.plan_json)
+    res = simulate_plan(plan)                # hw rebuilt from plan.hw_params
+    rep = res.energy(registry.get_energy_model(row.energy_model))
+    assert res.cycles == row.latency_cycles
+    assert rep.total_pj == row.energy_pj
+    assert rep.edp == row.edp
+    assert res.hbm_bytes == row.hbm_bytes
+
+
+def test_base_not_energy_dominated_by_small_at_vilbert_shapes():
+    """Acceptance: the paper's design point is on the base-vs-small
+    trade-off curve, not strictly worse, at ViLBERT-base shapes."""
+    cfg = registry.get_config("vilbert-base")
+    base = simulate_point(cfg, HW_PRESETS["streamdcim-base"])
+    small = simulate_point(cfg, HW_PRESETS["streamdcim-small"])
+    assert not dominates(small, base)
+    # the reason: half the macro array simulates strictly slower
+    assert small.latency_cycles > base.latency_cycles
+
+
+def test_multi_shape_sweeps_never_mix_shapes():
+    """Frontier and knee partition by (model, seq_len): the same design
+    point at a shorter sequence must not 'dominate' its longer twin."""
+    res = run_sweep(models=["whisper-base"],
+                    axes=Axes(groups=((4, 2),), rewrite_bus_bits=(512,),
+                              ping_pong=(True,)),
+                    seq_lens=(256, 1024), include_presets=False)
+    assert res.groups() == [("whisper-base", 256), ("whisper-base", 1024)]
+    # one design point per shape -> trivially on its shape's frontier
+    for seq in (256, 1024):
+        front = res.pareto("whisper-base", seq)
+        assert len(front) == 1 and front[0].seq_len == seq
+    # pareto(model) concatenates both shape frontiers, no cross-dominance
+    assert {r.seq_len for r in res.pareto("whisper-base")} == {256, 1024}
+    knees = res.knees()
+    assert set(knees) == {"whisper-base@seq256", "whisper-base@seq1024"}
+    assert knees["whisper-base@seq1024"].seq_len == 1024
+    ids = res.to_dict()["pareto"]
+    assert set(ids) == set(knees) and all(ids.values())
+
+
+def test_single_shape_sweep_keeps_bare_model_label(sweep):
+    assert sweep.label("vilbert-base", SEQ) == "vilbert-base"
+    assert set(sweep.knees()) == {"vilbert-base", "whisper-base"}
+
+
+def test_points_budget_keeps_presets_first():
+    res = run_sweep(models=["whisper-base"], points=2, seq_lens=(SEQ,))
+    assert [r.hw for r in res.rows] == ["streamdcim-base",
+                                        "streamdcim-small"]
+
+
+def test_pareto_frontier_helper_on_synthetic_rows():
+    def row(lat, pj):
+        return SweepRow(model="m", seq_len=0, hw=f"hw{lat}",
+                        hw_params={"num_groups": 4, "macros_per_group": 16},
+                        energy_model="e", latency_cycles=lat, hbm_bytes=0,
+                        energy_pj=pj, edp=lat * pj, utilization={},
+                        energy_by_resource={}, plan_json="{}")
+    a, b, c, d = row(10, 50.0), row(20, 20.0), row(30, 30.0), row(10, 60.0)
+    front = pareto_frontier([a, b, c, d])
+    assert [(r.latency_cycles, r.energy_pj) for r in front] == [(10, 50.0),
+                                                                (20, 20.0)]
+    # exact ties on both metrics are mutually non-dominated: all kept
+    t1, t2, e = row(100, 5.0), row(100, 5.0), row(200, 3.0)
+    front = pareto_frontier([t1, t2, e])
+    assert len(front) == 3
+    for f in front:
+        assert not any(dominates(r, f) for r in (t1, t2, e))
+    # ...but a same-energy/slower row is dominated, not a tie
+    assert len(pareto_frontier([row(100, 5.0), row(110, 5.0)])) == 1

@@ -1,0 +1,200 @@
+"""repro.sim.energy + Trace aggregate tests (ISSUE-3).
+
+Covers the trace-reduction edge cases (empty trace, predicate filtering,
+untagged events, cache invalidation) and the energy-model invariants the
+issue pins: energy is monotone in bytes moved, ping-pong never increases
+EDP at fixed shape, the three-way energy ordering matches the paper's
+efficiency claims, and the calibrated model agrees with the napkin
+constants the roofline benchmarks alias.
+"""
+import os
+import sys
+
+import pytest
+
+from repro.configs import registry
+from repro.configs.hardware import STREAMDCIM_BASE, HardwareConfig
+from repro.core.types import ExecutionMode
+from repro.sim import (ENERGY_PRESETS, EnergyModel, STREAMDCIM_ENERGY_BASE,
+                       compare_modes, energy_of_trace, simulate_plan)
+from repro.sim.trace import Event, Trace
+
+EM = ExecutionMode
+SEQ = 1024          # short sequences keep the simulated points fast
+
+
+def _trace(events):
+    tr = Trace()
+    for e in events:
+        tr.add(e)
+    return tr
+
+
+# ------------------------------------------------------------- trace edges
+
+def test_empty_trace_reductions():
+    tr = Trace()
+    assert tr.makespan == 0
+    assert tr.utilization("ATTN") == 0.0
+    assert tr.rewrite_stall_fraction() == 0.0
+    assert tr.bytes_moved("HBM") == 0
+    assert tr.dma_bytes_by_op() == {}
+    assert tr.utilizations() == {}
+    assert tr.summary()["makespan_cycles"] == 0.0
+    rep = energy_of_trace(tr, STREAMDCIM_BASE)
+    assert rep.total_pj == 0.0 and rep.edp == 0.0
+
+
+def test_bytes_moved_predicate_filtering():
+    tr = _trace([
+        Event(0, "dma", "HBM", 0, 10, bytes=100, tag="a:xdma"),
+        Event(1, "dma", "HBM", 10, 20, bytes=50, tag="b:qdma"),
+        Event(2, "forward", "NOC", 0, 5, bytes=999, tag="a:fwd"),
+    ])
+    assert tr.bytes_moved("HBM") == 150
+    assert tr.bytes_moved("HBM", pred=lambda e: e.op == "a") == 100
+    assert tr.bytes_moved("NOC") == 999
+    assert tr.bytes_moved("BUS") == 0
+
+
+def test_dma_bytes_by_op_untagged_events():
+    tr = _trace([
+        Event(0, "dma", "HBM", 0, 10, bytes=100, tag="a:xdma"),
+        Event(1, "dma", "HBM", 10, 20, bytes=7),            # untagged
+    ])
+    by_op = tr.dma_bytes_by_op()
+    assert by_op["a"] == 100
+    assert by_op[""] == 7           # untagged bytes keep their own bucket
+    assert sum(by_op.values()) == tr.bytes_moved("HBM")
+
+
+def test_trace_cache_invalidated_on_add():
+    tr = _trace([Event(0, "compute", "ATTN", 0, 10)])
+    assert tr.busy_cycles("ATTN") == 10 and tr.makespan == 10
+    tr.add(Event(1, "compute", "ATTN", 10, 30))
+    assert tr.busy_cycles("ATTN") == 30 and tr.makespan == 30
+    tr.events.append(Event(2, "compute", "GEN", 0, 5))    # direct append
+    assert tr.busy_cycles("GEN") == 5
+
+
+def test_cached_summary_matches_event_scan():
+    res = compare_modes(registry.get_config("vilbert-base"),
+                        STREAMDCIM_BASE, seq_len=SEQ)[EM.TILE_STREAM]
+    tr = res.trace
+    for r in ("GEN", "ATTN", "HBM", "NOC", "BUS"):
+        assert tr.busy_cycles(r) == sum(
+            e.cycles for e in tr.events if e.resource == r)
+        assert tr.bytes_moved(r) == sum(
+            e.bytes for e in tr.events if e.resource == r)
+    assert tr.makespan == max(e.end for e in tr.events)
+
+
+# --------------------------------------------------------- energy invariants
+
+def test_energy_monotone_in_bytes_moved():
+    base = [Event(0, "dma", "HBM", 0, 10, bytes=100, tag="a:xdma"),
+            Event(1, "forward", "NOC", 0, 10, bytes=64, tag="a:fwd"),
+            Event(2, "rewrite", "BUS", 0, 10, bytes=64, tag="a:rw")]
+    lo = energy_of_trace(_trace(base), STREAMDCIM_BASE)
+    for i in range(3):
+        more = [Event(e.task_id, e.kind, e.resource, e.start, e.end,
+                      e.bytes + (512 if j == i else 0), e.tag)
+                for j, e in enumerate(base)]
+        hi = energy_of_trace(_trace(more), STREAMDCIM_BASE)
+        assert hi.total_pj > lo.total_pj, f"event {i} bytes not charged"
+        assert hi.dynamic_pj > lo.dynamic_pj
+
+
+def test_energy_breakdown_sums_to_total():
+    res = compare_modes(registry.get_config("vilbert-base"),
+                        STREAMDCIM_BASE, seq_len=SEQ)[EM.TILE_STREAM]
+    rep = res.energy()
+    assert sum(rep.by_resource.values()) == pytest.approx(rep.total_pj)
+    # per-op breakdown covers all dynamic energy (leakage unattributed)
+    assert sum(rep.by_op.values()) == pytest.approx(rep.dynamic_pj)
+    assert rep.total_pj == rep.dynamic_pj + rep.leakage_pj
+    assert rep.edp == pytest.approx(rep.total_pj * res.cycles)
+
+
+def test_three_way_energy_ordering_matches_paper():
+    """Paper §IV efficiency claim: StreamDCIM beats layer-based beats
+    non-streaming on energy for the MHA models, under every preset."""
+    res = compare_modes(registry.get_config("vilbert-base"),
+                        STREAMDCIM_BASE, seq_len=SEQ)
+    for em in ENERGY_PRESETS.values():
+        e = {m: r.energy(em).total_pj for m, r in res.items()}
+        assert e[EM.TILE_STREAM] < e[EM.LAYER_STREAM] < e[EM.NON_STREAM], em.name
+        d = {m: r.energy(em).edp for m, r in res.items()}
+        assert d[EM.TILE_STREAM] < d[EM.LAYER_STREAM] < d[EM.NON_STREAM], em.name
+
+
+def test_ping_pong_never_increases_edp_at_fixed_shape():
+    from repro.plan import plan_model
+    cfg = registry.get_config("vilbert-base")
+    for bus in (512, 2048):
+        pp = HardwareConfig.sweep(rewrite_bus_bits=bus, ping_pong=True)
+        nopp = HardwareConfig.sweep(rewrite_bus_bits=bus, ping_pong=False)
+        r_pp = simulate_plan(plan_model(cfg, hw=pp, seq_len=SEQ), hw=pp)
+        r_no = simulate_plan(plan_model(cfg, hw=nopp, seq_len=SEQ), hw=nopp)
+        assert r_pp.edp() <= r_no.edp(), f"bus={bus}"
+        assert r_pp.cycles <= r_no.cycles
+
+
+def test_rewrite_events_carry_bytes():
+    res = compare_modes(registry.get_config("vilbert-base"),
+                        STREAMDCIM_BASE, seq_len=SEQ)
+    for r in res.values():
+        rewrites = [e for e in r.trace.events if e.kind == "rewrite"]
+        assert rewrites and all(e.bytes > 0 for e in rewrites)
+
+
+def test_byteless_rewrite_fallback_consistent_across_breakdowns():
+    """Byte-less rewrite events (pre-PR-3 traces) are charged via the
+    write-port width the cycles imply, identically in the per-resource
+    and per-op breakdowns — even mixed with byte-carrying rewrites."""
+    hw = STREAMDCIM_BASE
+    tr = _trace([
+        Event(0, "rewrite", "BUS", 0, 10, bytes=0, tag="a:rw"),   # legacy
+        Event(1, "rewrite", "BUS", 10, 20, bytes=64, tag="b:rw"),
+    ])
+    rep = energy_of_trace(tr, hw)
+    em = STREAMDCIM_ENERGY_BASE
+    expect_a = 10 * hw.rewrite_bytes_per_cycle * em.pj_per_rewrite_byte
+    expect_b = 64 * em.pj_per_rewrite_byte
+    assert rep.by_op["a"] == pytest.approx(expect_a)
+    assert rep.by_op["b"] == pytest.approx(expect_b)
+    assert rep.dynamic_pj == pytest.approx(expect_a + expect_b)
+    assert sum(rep.by_op.values()) == pytest.approx(rep.dynamic_pj)
+
+
+def test_energy_model_validation():
+    with pytest.raises(ValueError, match="pj_per_hbm_byte"):
+        EnergyModel(pj_per_hbm_byte=-1.0)
+    with pytest.raises(ValueError, match="leakage"):
+        EnergyModel(leak_pj_per_cycle={"GEN": -0.1})
+
+
+# ----------------------------------------------------- napkin cross-check
+
+def test_calibration_matches_napkin_constants():
+    """The benchmarks' joule-per-unit napkin names are aliases over the
+    calibrated model (satellite: duplicate constants retired)."""
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import common
+    em = STREAMDCIM_ENERGY_BASE
+    assert common.E_HBM_PER_BYTE == pytest.approx(em.pj_per_hbm_byte * 1e-12)
+    assert common.E_VMEM_PER_BYTE == pytest.approx(em.pj_per_noc_byte * 1e-12)
+    assert common.E_PER_FLOP == pytest.approx(em.pj_per_flop * 1e-12)
+    # sanity anchors: HBM ~5.6 pJ/bit, on-chip ~2 pJ/byte
+    assert 20 <= em.pj_per_hbm_byte <= 100
+    assert em.pj_per_noc_byte < em.pj_per_rewrite_byte < em.pj_per_hbm_byte
+    # CIM INT8 MACs must be cheaper per op than the napkin bf16 MXU flop
+    assert (em.pj_per_macro_cycle
+            / em.macro_ops_per_cycle(STREAMDCIM_BASE)) < em.pj_per_flop
+
+
+def test_registry_exposes_energy_models():
+    assert registry.get_energy_model(
+        "streamdcim-energy-base") is STREAMDCIM_ENERGY_BASE
+    assert set(registry.ENERGY_CONFIGS) == set(ENERGY_PRESETS)
