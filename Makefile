@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke
+.PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke replay-smoke
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -25,3 +25,8 @@ dse:
 
 dse-smoke:
 	$(PYTHON) benchmarks/run.py dse --json dse_sweep.json --points 4
+
+# Plan/trace replay smoke (DESIGN.md §10): record a tiny trace on CPU,
+# replay it through the simulator, emit the CalibrationReport artifact.
+replay-smoke:
+	$(PYTHON) benchmarks/run.py replay --json replay_report.json

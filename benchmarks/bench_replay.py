@@ -1,0 +1,89 @@
+"""Plan/trace replay section (``run.py replay``) — DESIGN.md §10.
+
+Runs the full record→attach→replay→calibrate pipeline at smoke size for
+one MHA model (vilbert-base: the planner tile-streams) and one GQA model
+(qwen2-vl-2b: the planner falls back to layer-streaming — the worked
+divergence example of DESIGN.md §10):
+
+1. compile a small-seq plan, run its first ops through the *real*
+   jnp kernel paths under ``repro.sim.replay.recording`` (wall-time
+   ``KernelTrace`` records: grid, tiling, cycles, bytes);
+2. attach the records to the plan and replay through ``simulate_plan``
+   (recorded timing for traced ops, analytic lowering for the rest —
+   the mixed-plan contract the tests pin);
+3. fit a ``CalibrationReport`` (per-op-class analytic-vs-recorded error
+   + per-resource cycle scale factors) and re-simulate the analytic
+   plan with the calibration applied.
+
+Each (traced plan, report) pair is registered via ``common.log_replay``
+so ``run.py replay --json`` emits the calibration artifact the CI
+replay-smoke step uploads.  Recorded cycles are *host-platform* wall
+time (CPU here), so the absolute calibration factors are large and
+per-platform; the pipeline is the deliverable, not the constants.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List
+
+if __name__ == "__main__":      # allow ``python benchmarks/bench_replay.py``
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+from benchmarks.common import csv_row, log_replay
+
+SEQ = 256          # one tile block: real kernels at recordable CPU cost
+MAX_OPS = 3        # traced ops per model; the rest replay analytically
+
+
+def run() -> List[str]:
+    from repro.configs import registry
+    from repro.plan import plan_model
+    from repro.sim import fit_calibration, record_plan, simulate_plan
+
+    rows: List[str] = []
+    for arch in ("vilbert-base", "qwen2-vl-2b"):
+        cfg = registry.get_config(arch)
+        plan = plan_model(cfg, seq_len=SEQ)
+        traced, rec = record_plan(plan, max_ops=MAX_OPS, iters=1, warmup=1)
+        report = fit_calibration(traced)
+        log_replay(traced, report)
+
+        analytic = simulate_plan(plan)
+        replayed = simulate_plan(traced)
+        calibrated = simulate_plan(plan, calibration=report)
+
+        wall_us = sum(t.wall_time_s for t in rec.records
+                      if t.op in traced.traced_ops) * 1e6
+        mode = ",".join(m.value for m in plan.modes)
+        rows.append(csv_row(
+            f"replay_{arch}_record", wall_us,
+            f"{len(traced.traced_ops)}/{len(plan.layers) + len(plan.gemms)} "
+            f"ops recorded (mode {mode}); grids "
+            + " ".join(str(tuple(t.grid)) for t in rec.records
+                       if t.op in traced.traced_ops)))
+        rows.append(csv_row(
+            f"replay_{arch}_mixed", 0.0,
+            f"replayed {replayed.replayed_ops} ops: {replayed.cycles} cyc "
+            f"vs analytic {analytic.cycles} cyc "
+            f"({replayed.cycles / analytic.cycles:.2f}x)"))
+        for kind, c in sorted(report.per_class.items()):
+            rows.append(csv_row(
+                f"replay_{arch}_error_{kind}", 0.0,
+                f"recorded/analytic ratio {c['ratio']:.1f}x over "
+                f"{int(c['count'])} ops; mean |rel err| "
+                f"{c['mean_abs_rel_err']:.2f}"))
+        rows.append(csv_row(
+            f"replay_{arch}_calibrated", 0.0,
+            f"calibrated sim {calibrated.cycles} cyc "
+            f"({calibrated.cycles / analytic.cycles:.1f}x analytic; "
+            f"scales "
+            + " ".join(f"{r}={s:.0f}" for r, s in
+                       sorted(report.scale.items())) + ")"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -52,6 +52,11 @@ PLAN_LOG: list = []
 # can attach the machine-readable sweep artifact (rows + plans + pareto).
 DSE_LOG: list = []
 
+# The replay section registers (traced ExecutionPlan, CalibrationReport)
+# pairs so ``run.py --json`` can emit the calibration artifact the CI
+# replay-smoke step uploads (DESIGN.md §10).
+REPLAY_LOG: list = []
+
 
 def log_plan(plan) -> None:
     """Register an ``repro.plan.ExecutionPlan`` for the --json report."""
@@ -63,6 +68,12 @@ def log_dse(result) -> None:
     DSE_LOG.append(result)
 
 
+def log_replay(traced_plan, report) -> None:
+    """Register a traced plan + its ``CalibrationReport`` for --json."""
+    REPLAY_LOG.append((traced_plan, report))
+
+
 def reset_plan_log() -> None:
     PLAN_LOG.clear()
     DSE_LOG.clear()
+    REPLAY_LOG.clear()

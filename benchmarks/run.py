@@ -1,7 +1,9 @@
 """Benchmark harness main — one section per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (deliverable d); ``--json <path>``
 additionally writes a machine-readable report (per-section rows +
-``ExecutionPlan`` summaries registered via ``benchmarks.common.log_plan``).
+``ExecutionPlan`` summaries + the DSE sweep + replay calibration
+artifacts registered via ``benchmarks.common``).  The full row/report
+schema is documented in README.md §"The --json report schema".
 
 Usage::
 
@@ -31,7 +33,8 @@ def _sections(points=None):
     import functools
 
     from benchmarks import (bench_decode, bench_dse, bench_kernels,
-                            bench_pruning, bench_rewrite_overlap, bench_sim,
+                            bench_pruning, bench_replay,
+                            bench_rewrite_overlap, bench_sim,
                             bench_stream_modes, roofline)
     return [
         ("bench_stream_modes", "Fig6/Fig7 stream-mode comparison",
@@ -44,6 +47,8 @@ def _sections(points=None):
          bench_sim.run),
         ("dse", "Design-space exploration (energy/latency Pareto + knee)",
          functools.partial(bench_dse.run, points=points)),
+        ("replay", "Plan/trace replay + calibration (record real kernels)",
+         bench_replay.run),
         ("bench_decode", "Decode regime (tile-stream latency win)",
          bench_decode.run),
         ("bench_kernels", "Kernel micro-benchmarks", bench_kernels.run),
@@ -124,6 +129,15 @@ def main(argv=None) -> None:
         report["plans"] = [p.summary() for p in common.PLAN_LOG]
         if common.DSE_LOG:
             report["dse"] = common.DSE_LOG[-1].to_dict()
+        if common.REPLAY_LOG:
+            # The calibration artifact (DESIGN.md §10): one entry per
+            # recorded model — the fitted CalibrationReport plus the
+            # traced plan JSON that replays it (CI uploads this).
+            report["replay"] = [
+                {"calibration": rep.to_dict(),
+                 "traced_ops": list(plan.traced_ops),
+                 "plan_json": plan.to_json()}
+                for plan, rep in common.REPLAY_LOG]
         report["ok"] = failed == 0
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)

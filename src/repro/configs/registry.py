@@ -38,10 +38,42 @@ LONG_CONTEXT_OK = {"mamba2-780m", "hymba-1.5b", "h2o-danube3-4b"}
 
 # CIM design points for the repro.sim simulator (same registry object as
 # repro.configs.hardware.HW_PRESETS — adding a preset updates both names).
+#
+# Provenance, one line per entry (cross-referenced from DESIGN.md §7/§9;
+# "napkin" = order-of-magnitude estimate, not a paper number):
+#
+#   streamdcim-base    — paper §II/Fig. 2 macro geometry (groups of
+#                        128x128 INT8 TBR-CIM macros, dual-rail bit-serial
+#                        input) with the §I TranCIM-derived 512-bit
+#                        rewrite bus, calibrated so serial rewriting
+#                        stalls ~57% of the §I QK^T micro-workload.
+#   streamdcim-small   — napkin: half the macro groups/macros of base, a
+#                        capacity-pressure corner (no paper counterpart).
+#   streamdcim-widebus — paper §I sensitivity direction: 4x rewrite bus
+#                        (2048-bit) showing the stall analysis when the
+#                        write port stops being the bottleneck.
 HW_CONFIGS: Dict[str, HardwareConfig] = HW_PRESETS
 
 # Energy-cost design points (same object as repro.sim.energy.ENERGY_PRESETS)
 # for SimResult.energy() / repro.dse sweeps.
+#
+# Provenance (DESIGN.md §7/§9 — ratios between modes/design points are
+# meaningful, absolute joules are not):
+#
+#   streamdcim-energy-base      — napkin v5e-class constants (HBM ~45
+#                                 pJ/byte ≈ 5.6 pJ/bit DRAM, on-chip ~2
+#                                 pJ/byte, ~0.8 pJ/bf16-flop — the
+#                                 benchmarks/common.py aliases), with the
+#                                 CIM-side per-macro-cycle/rewrite-byte
+#                                 costs chosen so the three-way energy
+#                                 AND EDP ordering reproduces paper §IV
+#                                 (TILE < LAYER < NON on MHA models).
+#   streamdcim-energy-lowleak   — napkin 5x leakage reduction (aggressive
+#                                 power gating); flattens the Pareto
+#                                 frontier's idle-area penalty.
+#   streamdcim-energy-dramheavy — napkin 2x pJ/HBM-byte (older HBM /
+#                                 LPDDR-class); traffic deltas between
+#                                 execution modes dominate even harder.
 from repro.sim.energy import ENERGY_PRESETS, EnergyModel  # noqa: E402
 
 ENERGY_CONFIGS: Dict[str, EnergyModel] = ENERGY_PRESETS

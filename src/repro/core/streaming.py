@@ -19,6 +19,7 @@ aggressively-GQA LMs, which fall back to LAYER_STREAM.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from repro.core.types import ExecutionMode, ModelConfig
@@ -32,6 +33,13 @@ __all__ = ["tile_stream_profitable", "choose_mode",
            "streamed_bytes_per_layer"]
 
 
+def _deprecated(old: str, new: str) -> None:
+    # stacklevel=3: point past this helper and the shim at the caller.
+    warnings.warn(
+        f"repro.core.streaming.{old} is deprecated since PR 2; "
+        f"migrate to {new}", DeprecationWarning, stacklevel=3)
+
+
 def choose_mode(cfg: ModelConfig, *, d_model: Optional[int] = None,
                 num_kv_heads: Optional[int] = None,
                 head_dim: Optional[int] = None) -> ExecutionMode:
@@ -39,7 +47,11 @@ def choose_mode(cfg: ModelConfig, *, d_model: Optional[int] = None,
 
     .. deprecated:: PR 2 — use ``repro.plan.plan_model`` (whole-model
        resolution) or ``repro.plan.resolve_layer_mode`` (one layer).
+       Emits ``DeprecationWarning`` (test-pinned in ``tests/test_plan.py``).
     """
+    _deprecated("choose_mode",
+                "repro.plan.plan_model (whole model) or "
+                "repro.plan.heuristics.resolve_layer_mode (one layer)")
     return resolve_layer_mode(
         cfg.execution_mode,
         d_kv=d_model or cfg.d_model,
@@ -57,8 +69,12 @@ def streamed_bytes_per_layer(seq_q: int, seq_kv: int, d_model: int,
 
     .. deprecated:: PR 2 — the planner records this prediction per layer
        in ``LayerPlan.hbm_bytes``; use ``repro.plan.attn_hbm_bytes`` for
-       raw-geometry queries.
+       raw-geometry queries.  Emits ``DeprecationWarning`` (test-pinned
+       in ``tests/test_plan.py``).
     """
+    _deprecated("streamed_bytes_per_layer",
+                "repro.plan.heuristics.attn_hbm_bytes (raw geometry) or "
+                "LayerPlan.hbm_bytes (planned layers)")
     return attn_hbm_bytes(seq_q, seq_kv, d_model, num_heads, num_kv_heads,
                           head_dim, mode, block_q=block_q,
                           bytes_per_el=bytes_per_el)

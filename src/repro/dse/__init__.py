@@ -23,11 +23,12 @@ Entry points: ``python -m repro.dse`` and ``benchmarks/run.py dse``
 (``--json`` artifact, ``--points N`` budget for CI smoke).
 """
 from repro.dse.sweep import (Axes, DEFAULT_AXES, SweepResult, SweepRow,
-                             dominates, grid_points, pareto_frontier,
-                             run_sweep, simulate_point, utilization_knee)
+                             calibration_label, dominates, grid_points,
+                             pareto_frontier, run_sweep, simulate_point,
+                             utilization_knee)
 
 __all__ = [
-    "Axes", "DEFAULT_AXES", "SweepResult", "SweepRow", "dominates",
-    "grid_points", "pareto_frontier", "run_sweep", "simulate_point",
-    "utilization_knee",
+    "Axes", "DEFAULT_AXES", "SweepResult", "SweepRow", "calibration_label",
+    "dominates", "grid_points", "pareto_frontier", "run_sweep",
+    "simulate_point", "utilization_knee",
 ]

@@ -15,12 +15,14 @@ from repro.dse.sweep import DEFAULT_AXES, run_sweep
 from repro.sim.energy import ENERGY_PRESETS
 
 
-def format_table(result, model: str, seq_len: int, knees=None) -> str:
+def format_table(result, model: str, seq_len: int, knees=None,
+                 calibration: str = None) -> str:
     knees = result.knees() if knees is None else knees
-    rows = result.rows_for(model, seq_len)
-    frontier = set(id(r) for r in result.pareto(model, seq_len))
-    knee = knees.get(result.label(model, seq_len))
-    lines = [f"== {result.label(model, seq_len)} ({len(rows)} points, "
+    rows = result.rows_for(model, seq_len, calibration)
+    frontier = set(id(r) for r in result.pareto(model, seq_len, calibration))
+    knee = knees.get(result.label(model, seq_len, calibration))
+    lines = [f"== {result.label(model, seq_len, calibration)} "
+             f"({len(rows)} points, "
              f"energy model {result.energy_model}) ==",
              f"{'':2s}{'design point':<42s} {'cycles':>12s} {'energy(uJ)':>11s} "
              f"{'EDP':>10s} {'utilGEN':>8s} {'utilATTN':>9s}"]
@@ -51,10 +53,20 @@ def main(argv=None) -> None:
     ap.add_argument("--energy", default="streamdcim-energy-base",
                     choices=sorted(ENERGY_PRESETS),
                     help="energy model preset")
+    ap.add_argument("--calibration", metavar="PATH", default=None,
+                    help="CalibrationReport JSON (repro.sim.replay) — "
+                         "sweeps the analytic AND the trace-calibrated "
+                         "timing as a second axis (DESIGN.md §10)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full sweep artifact (rows + plans + "
                          "pareto + knees)")
     args = ap.parse_args(argv)
+
+    calibrations = (None,)
+    if args.calibration:
+        from repro.sim.replay import CalibrationReport
+        with open(args.calibration) as f:
+            calibrations = (None, CalibrationReport.from_json(f.read()))
 
     done = [0]
 
@@ -65,12 +77,14 @@ def main(argv=None) -> None:
     result = run_sweep(models=args.models, axes=DEFAULT_AXES,
                        points=args.points, seq_lens=args.seq,
                        energy_model=ENERGY_PRESETS[args.energy],
-                       progress=progress)
+                       calibrations=calibrations, progress=progress)
     print(file=sys.stderr)
     knees = result.knees()
     for model, seq_len in result.groups():
-        print(format_table(result, model, seq_len, knees=knees))
-        print()
+        for cal in result.calibrations():
+            print(format_table(result, model, seq_len, knees=knees,
+                               calibration=cal))
+            print()
     if result.skipped:
         print(f"# {len(result.skipped)} invalid grid combinations skipped")
     if args.json:

@@ -15,6 +15,13 @@ construction, plus independent axes); combinations the validator rejects
 are recorded in ``SweepResult.skipped``, never silently dropped.  The
 registry presets always lead the point list, so a ``--points N`` budget
 (CI smoke) still covers the named designs.
+
+Trace calibration (DESIGN.md §10): ``run_sweep(calibrations=...)`` adds a
+third partition axis next to model and shape — each entry (None, or a
+``repro.sim.replay.CalibrationReport`` fitted from recorded kernel
+traces) sweeps the grid once with the fitted per-resource cycle scales
+applied; rows are labeled and frontier/knee extraction never mixes
+calibrated with uncalibrated timing.
 """
 from __future__ import annotations
 
@@ -126,6 +133,14 @@ class SweepRow:
     utilization: Mapping[str, float]
     energy_by_resource: Mapping[str, float]
     plan_json: str            # ExecutionPlan.to_json() — the replay artifact
+    calibration: str = "analytic"   # CalibrationReport the timing used
+                                    # ("analytic" = uncalibrated model)
+    # The applied per-resource scale factors (empty = analytic), so a
+    # calibrated row is reproducible from the artifact alone:
+    # simulate_plan(from_json(plan_json), calibration=calibration_scale)
+    # replays the row's latency exactly, like plan_json does analytically.
+    calibration_scale: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def num_macros(self) -> int:
@@ -137,6 +152,7 @@ class SweepRow:
         d["utilization"] = dict(self.utilization)
         d["energy_by_resource"] = dict(self.energy_by_resource)
         d["hw_params"] = dict(self.hw_params)
+        d["calibration_scale"] = dict(self.calibration_scale)
         d["num_macros"] = self.num_macros
         return d
 
@@ -211,52 +227,80 @@ class SweepResult:
                 seen.append(key)
         return seen
 
-    def label(self, model: str, seq_len: int) -> str:
-        """Group label for reports: just the model name when one shape
-        was swept, ``model@seqN`` when several disambiguate."""
-        multi = len({s for m, s in self.groups() if m == model}) > 1
-        return f"{model}@seq{seq_len}" if multi else model
+    def calibrations(self) -> List[str]:
+        """Distinct calibration labels in row order (``["analytic"]``
+        for an uncalibrated sweep).  A third partition key next to model
+        and shape: calibrated latencies are scaled by fitted factors, so
+        letting an analytic row 'dominate' a calibrated one would be as
+        meaningless as mixing shapes."""
+        seen: List[str] = []
+        for r in self.rows:
+            if r.calibration not in seen:
+                seen.append(r.calibration)
+        return seen
 
-    def rows_for(self, model: str,
-                 seq_len: Optional[int] = None) -> List[SweepRow]:
+    def _cells(self) -> List[Tuple[str, int, str]]:
+        """(model, seq_len, calibration) cells that actually have rows."""
+        cals = self.calibrations()
+        return [(m, s, c) for m, s in self.groups() for c in cals
+                if any(r.model == m and r.seq_len == s
+                       and r.calibration == c for r in self.rows)]
+
+    def label(self, model: str, seq_len: int,
+              calibration: Optional[str] = None) -> str:
+        """Group label for reports: just the model name when one shape
+        was swept, ``model@seqN`` when several disambiguate, and a
+        ``+calibration`` suffix when the sweep ran a calibration axis."""
+        multi = len({s for m, s in self.groups() if m == model}) > 1
+        lbl = f"{model}@seq{seq_len}" if multi else model
+        if calibration is not None and len(self.calibrations()) > 1:
+            lbl += f"+{calibration}"
+        return lbl
+
+    def rows_for(self, model: str, seq_len: Optional[int] = None,
+                 calibration: Optional[str] = None) -> List[SweepRow]:
         return [r for r in self.rows if r.model == model
-                and (seq_len is None or r.seq_len == seq_len)]
+                and (seq_len is None or r.seq_len == seq_len)
+                and (calibration is None or r.calibration == calibration)]
 
     def pareto(self, model: Optional[str] = None,
-               seq_len: Optional[int] = None) -> List[SweepRow]:
-        """Latency/energy frontier, computed per (model, seq_len) group
-        and concatenated in group order over whatever ``model`` /
-        ``seq_len`` leave unfixed."""
+               seq_len: Optional[int] = None,
+               calibration: Optional[str] = None) -> List[SweepRow]:
+        """Latency/energy frontier, computed per (model, seq_len,
+        calibration) cell and concatenated in cell order over whatever
+        ``model`` / ``seq_len`` / ``calibration`` leave unfixed."""
         out: List[SweepRow] = []
-        for m, s in self.groups():
+        for m, s, c in self._cells():
             if (model is None or m == model) \
-                    and (seq_len is None or s == seq_len):
-                out.extend(pareto_frontier(self.rows_for(m, s)))
+                    and (seq_len is None or s == seq_len) \
+                    and (calibration is None or c == calibration):
+                out.extend(pareto_frontier(self.rows_for(m, s, c)))
         return out
 
     def knees(self) -> Dict[str, SweepRow]:
         out: Dict[str, SweepRow] = {}
-        for m, s in self.groups():
-            knee = utilization_knee(self.rows_for(m, s),
+        for m, s, c in self._cells():
+            knee = utilization_knee(self.rows_for(m, s, c),
                                     self.knee_tolerance)
             if knee is not None:
-                out[self.label(m, s)] = knee
+                out[self.label(m, s, c)] = knee
         return out
 
     def to_dict(self) -> Dict[str, object]:
         # Frontier members ARE entries of self.rows: index by identity
         # (value-equality .index() would deep-compare plan JSON, O(rows^2)).
         index_of = {id(r): i for i, r in enumerate(self.rows)}
-        pareto_ids = {self.label(m, s):
+        pareto_ids = {self.label(m, s, c):
                       [index_of[id(r)]
-                       for r in pareto_frontier(self.rows_for(m, s))]
-                      for m, s in self.groups()}
+                       for r in pareto_frontier(self.rows_for(m, s, c))]
+                      for m, s, c in self._cells()}
         return {
             "energy_model": self.energy_model,
             "num_rows": len(self.rows),
+            "calibrations": self.calibrations(),
             "rows": [r.to_dict() for r in self.rows],
             "skipped": list(self.skipped),
-            "pareto": pareto_ids,       # row indices, per (model, shape)
+            "pareto": pareto_ids,  # row indices, per (model, shape, cal)
             "knees": {m: r.to_dict() for m, r in self.knees().items()},
             "knee_tolerance": self.knee_tolerance,
         }
@@ -266,16 +310,38 @@ class SweepResult:
 # The sweep driver
 # ---------------------------------------------------------------------------
 
+def calibration_label(calibration) -> str:
+    """Row label for a ``simulate_point(calibration=...)`` argument:
+    ``"analytic"`` for None (uncalibrated timing), the report's name for
+    a ``CalibrationReport``, or a content-derived ``custom:ATTNx2-...``
+    label for a raw scale mapping — two *different* ad-hoc scalings must
+    never collapse into one frontier cell."""
+    if calibration is None:
+        return "analytic"
+    name = getattr(calibration, "name", None)
+    if name is not None:
+        return name
+    return "custom:" + "-".join(f"{r}x{s:g}"
+                                for r, s in sorted(calibration.items()))
+
+
 def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
-                   energy_model: Optional[EnergyModel] = None) -> SweepRow:
+                   energy_model: Optional[EnergyModel] = None,
+                   calibration=None) -> SweepRow:
     """One (model config, design point, shape) evaluation through the
-    canonical path: ``plan_model`` -> ``simulate_plan`` -> energy fold."""
+    canonical path: ``plan_model`` -> ``simulate_plan`` -> energy fold.
+    ``calibration`` (a ``repro.sim.replay.CalibrationReport`` or raw
+    resource->factor mapping) scales the analytic timing by the fitted
+    per-resource factors — the trace-calibrated sweep axis (DESIGN.md
+    §10)."""
     from repro.plan.planner import plan_model
     from repro.sim.pipeline import simulate_plan
+    from repro.sim.replay import resolve_calibration
     em = energy_model or STREAMDCIM_ENERGY_BASE
     plan = plan_model(cfg, hw=hw, seq_len=seq_len)
-    res = simulate_plan(plan, hw=hw)
+    res = simulate_plan(plan, hw=hw, calibration=calibration)
     rep = res.energy(em)
+    scale = resolve_calibration(calibration)
     return SweepRow(
         model=cfg.name, seq_len=seq_len, hw=hw.name,
         hw_params=dataclasses.asdict(hw), energy_model=em.name,
@@ -283,7 +349,9 @@ def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
         energy_pj=rep.total_pj, edp=rep.edp,
         utilization=res.trace.utilizations(),
         energy_by_resource=dict(rep.by_resource),
-        plan_json=plan.to_json())
+        plan_json=plan.to_json(),
+        calibration=calibration_label(calibration),
+        calibration_scale=dict(scale) if scale else {})
 
 
 def run_sweep(models: Optional[Sequence[str]] = None,
@@ -294,11 +362,18 @@ def run_sweep(models: Optional[Sequence[str]] = None,
               energy_model: Optional[EnergyModel] = None,
               include_presets: bool = True,
               knee_tolerance: float = 0.10,
+              calibrations: Sequence[object] = (None,),
               progress=None) -> SweepResult:
     """Run the grid.  ``models`` are registry arch names (default: the
     simulator-supported pool); ``points`` caps the number of *design
     points* (the per-model row count follows), presets first so a small
-    budget still sweeps the named configs."""
+    budget still sweeps the named configs.
+
+    ``calibrations`` is the trace-calibration axis (DESIGN.md §10): each
+    entry — None for the uncalibrated analytic model, or a
+    ``repro.sim.replay.CalibrationReport`` / raw resource->factor
+    mapping — sweeps the whole grid once, labeled on the rows; frontier
+    and knee extraction never mix calibrations."""
     from repro.configs import registry
     em = energy_model or STREAMDCIM_ENERGY_BASE
     model_names = list(models) if models else list(registry.SIM_ARCHS)
@@ -310,10 +385,12 @@ def run_sweep(models: Optional[Sequence[str]] = None,
     for name in model_names:
         cfg = registry.get_config(name)
         for seq in seq_lens:
-            for hw in hw_points:
-                row = simulate_point(cfg, hw, seq_len=seq, energy_model=em)
-                rows.append(row)
-                if progress is not None:
-                    progress(row)
+            for cal in calibrations:
+                for hw in hw_points:
+                    row = simulate_point(cfg, hw, seq_len=seq,
+                                         energy_model=em, calibration=cal)
+                    rows.append(row)
+                    if progress is not None:
+                        progress(row)
     return SweepResult(rows=rows, skipped=skipped, energy_model=em.name,
                        knee_tolerance=knee_tolerance)

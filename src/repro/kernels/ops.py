@@ -20,6 +20,7 @@ the dataflow deltas are modeled analytically in ``benchmarks/`` (DESIGN.md §6).
 from __future__ import annotations
 
 import functools
+import sys
 from typing import Optional, Tuple
 
 import jax
@@ -37,6 +38,16 @@ from repro.kernels.tile_gemm import tile_gemm
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _replay_recorder(*arrays):
+    """The active ``repro.sim.replay`` recorder for this kernel call, or
+    None — including when the replay module was never imported (checked
+    via ``sys.modules`` so the common path costs one dict lookup)."""
+    replay = sys.modules.get("repro.sim.replay")
+    if replay is None:
+        return None
+    return replay.recorder_for(*arrays)
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> Tuple[jax.Array, int]:
@@ -214,12 +225,40 @@ def attention_by_plan(layer_plan, q: jax.Array, x_kv: jax.Array,
     LAYER_STREAM / TILE_STREAM — numerically equivalent, tests assert it),
     its ``block_q``/``block_kv`` set the kernel tiling.  Array shapes may
     be reduced vs the plan's full geometry (CPU-hosted numerics at small
-    dims); the dataflow decision is shape-independent."""
-    return _attention_dispatch(
+    dims); the dataflow decision is shape-independent.
+
+    Inside a ``repro.sim.replay.recording()`` block (and outside ``jit``)
+    the call additionally emits one op-level ``KernelTrace`` — grid,
+    block tiling actually used, wall-time cycles, bytes moved — ready to
+    ``ExecutionPlan.attach_traces`` (DESIGN.md §10)."""
+    call = functools.partial(
+        _attention_dispatch,
         layer_plan.mode, q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
         causal=causal, window=window, q_offset=q_offset, norm_eps=norm_eps,
         use_pallas=use_pallas, block_q=layer_plan.block_q,
         block_k=layer_plan.block_kv)
+    rec = _replay_recorder(q, x_kv, wk, wv)
+    if rec is None:
+        return call()
+    from repro.plan.heuristics import attn_hbm_bytes
+    B, Hq, Sq, hd = q.shape
+    Skv, d_kv = x_kv.shape[1], x_kv.shape[2]
+    Hkv = wk.shape[1]
+    bq = _pick_block(Sq, layer_plan.block_q)
+    bk = _pick_block(Skv, layer_plan.block_kv)
+    nbytes = B * attn_hbm_bytes(Sq, Skv, d_kv, Hq, Hkv, hd, layer_plan.mode,
+                                block_q=bq,
+                                bytes_per_el=q.dtype.itemsize)
+    # Work the measured call performs: QK^T + PV plus the K/V generation
+    # einsums (fused or materialized).  Q arrives pre-projected (this
+    # function's contract), so no Q-projection term.
+    flops = B * (4 * Hq * Sq * Skv * hd
+                 + 4 * Skv * d_kv * Hkv * hd)
+    return rec.measure(
+        call, op=layer_plan.name, kind="attention",
+        mode=layer_plan.mode.value,
+        grid=(B, -(-Sq // bq), -(-Skv // bk)),
+        block_q=bq, block_kv=bk, hbm_bytes=nbytes, flops=flops)
 
 
 def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,

@@ -19,6 +19,7 @@ Grid: (batch, q_blocks, kv_blocks), kv innermost.  Online-softmax state for
 from __future__ import annotations
 
 import functools
+import sys
 from typing import Optional
 
 import jax
@@ -163,7 +164,7 @@ def stream_attention(q: jax.Array, x_kv: jax.Array,
     wk2 = wk.reshape(D, Hkv * hd)
     wv2 = wv.reshape(D, Hkv * hd)
 
-    return pl.pallas_call(
+    call = lambda: pl.pallas_call(  # noqa: E731
         kernel,
         grid=(B, nqb, nkb),
         in_specs=[
@@ -186,3 +187,22 @@ def stream_attention(q: jax.Array, x_kv: jax.Array,
         interpret=interpret,
     )(q, x_kv, wk2, wv2, sin.astype(jnp.float32), cos.astype(jnp.float32),
       k_gamma.reshape(1, hd))
+
+    # Plan/trace replay instrumentation (DESIGN.md §10): under an active
+    # ``repro.sim.replay.recording()`` block (and outside jit) emit one
+    # kernel-level KernelTrace carrying the pallas grid actually launched
+    # and the TILE_STREAM traffic (x_kv streamed, K/V never in HBM).
+    replay = sys.modules.get("repro.sim.replay")
+    rec = replay.recorder_for(q, x_kv, wk, wv) if replay is not None else None
+    if rec is not None:
+        itemsize = jnp.dtype(q.dtype).itemsize
+        # q in + out once, x_kv re-streamed per q-block, weights fetched
+        # once (constant index map) — mirrors the §II-B dataflow.
+        io_bytes = (2 * q.size + nqb * x_kv.size
+                    + wk.size + wv.size) * itemsize
+        return rec.measure(
+            call, op=rec.current_label("stream_attention"),
+            kind="attention", mode="tile_stream", grid=(B, nqb, nkb),
+            block_q=bq, block_kv=bk, hbm_bytes=io_bytes,
+            flops=B * (4 * Hq * Sq * Sk * hd + 4 * Sk * D * Hkv * hd))
+    return call()

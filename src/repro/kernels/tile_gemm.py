@@ -14,6 +14,7 @@ weight column-block is fetched once and reused across every input row-block
 from __future__ import annotations
 
 import functools
+import sys
 from typing import Optional
 
 import jax
@@ -53,7 +54,7 @@ def tile_gemm(x: jax.Array, w: jax.Array, *,
     out_dtype = out_dtype or x.dtype
 
     kernel = functools.partial(_gemm_kernel, num_k_blocks=nk)
-    return pl.pallas_call(
+    call = lambda: pl.pallas_call(  # noqa: E731
         kernel,
         grid=(nn, nm, nk),
         in_specs=[
@@ -65,3 +66,17 @@ def tile_gemm(x: jax.Array, w: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+    # Plan/trace replay instrumentation (DESIGN.md §10): inside an active
+    # ``repro.sim.replay.recording()`` block (and outside jit) emit one
+    # kernel-level KernelTrace with the grid actually launched.
+    replay = sys.modules.get("repro.sim.replay")
+    rec = replay.recorder_for(x, w) if replay is not None else None
+    if rec is not None:
+        itemsize = jnp.dtype(x.dtype).itemsize
+        return rec.measure(
+            call, op=rec.current_label("tile_gemm"), kind="gemm",
+            grid=(nn, nm, nk), block_q=bm, block_kv=bn,
+            hbm_bytes=(M * K + K * N + M * N) * itemsize,
+            flops=2 * M * K * N)
+    return call()

@@ -26,13 +26,17 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, Mapping, Optional, Tuple, Union
+from typing import (Dict, Iterable, Mapping, Optional, Tuple, TYPE_CHECKING,
+                    Union)
 
 from repro.configs.hardware import HW_PRESETS, HardwareConfig
 from repro.core.types import (AttnKind, ExecutionMode, ModelConfig,
                               ShapeConfig, SHAPES)
 from repro.plan.heuristics import (DEFAULT_BLOCK, attn_hbm_bytes,
                                    resolve_layer_mode)
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.sim.replay import KernelTrace
 
 PLAN_VERSION = 1
 
@@ -65,10 +69,23 @@ class LayerPlan:
                            # when pruning is off; informational for now)
     hbm_bytes: int         # predicted streamed HBM bytes for this layer
     rewrite_cycles: int    # predicted CIM write-port cycles for this layer
+    # Recorded kernel execution for this op (repro.sim.replay.KernelTrace)
+    # or None; when present, simulate_plan replays it in place of the
+    # analytic lowering (DESIGN.md §10).
+    trace: Optional["KernelTrace"] = None
 
     @property
     def kv_width(self) -> int:
         return 2 * self.kv_heads * self.head_dim
+
+    def attach_trace(self, trace: Optional["KernelTrace"]) -> "LayerPlan":
+        """A copy with ``trace`` attached (or detached for None).  The
+        record must name this op — attaching another op's timing would
+        silently mis-calibrate the replay."""
+        if trace is not None and trace.op != self.name:
+            raise ValueError(f"trace for op {trace.op!r} cannot attach to "
+                             f"LayerPlan {self.name!r}")
+        return dataclasses.replace(self, trace=trace)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +101,13 @@ class GemmPlan:
     k: int
     n: int
     mode: ExecutionMode
+    trace: Optional["KernelTrace"] = None   # recorded timing (see LayerPlan)
+
+    def attach_trace(self, trace: Optional["KernelTrace"]) -> "GemmPlan":
+        if trace is not None and trace.op != self.name:
+            raise ValueError(f"trace for op {trace.op!r} cannot attach to "
+                             f"GemmPlan {self.name!r}")
+        return dataclasses.replace(self, trace=trace)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +162,14 @@ class ExecutionPlan:
     def total_rewrite_cycles(self) -> int:
         return sum(lp.rewrite_cycles for lp in self.layers)
 
+    @property
+    def traced_ops(self) -> Tuple[str, ...]:
+        """Names of ops carrying an attached ``KernelTrace`` (these replay
+        recorded timing in ``simulate_plan``; the rest lower analytically
+        — DESIGN.md §10)."""
+        return tuple(p.name for p in self.layers + self.gemms
+                     if p.trace is not None)
+
     def layer(self, key: Union[int, str]) -> LayerPlan:
         """Look up a LayerPlan by op name, or by *position* in
         ``self.layers`` for an int (NOT the model layer index — multimodal
@@ -168,7 +200,36 @@ class ExecutionPlan:
             "heterogeneous": self.heterogeneous,
             "total_hbm_bytes": self.total_hbm_bytes,
             "total_rewrite_cycles": self.total_rewrite_cycles,
+            "traced_ops": len(self.traced_ops),
         }
+
+    # ---------- trace attachment (repro.sim.replay) ----------
+
+    def attach_traces(self, traces: Union[Mapping[str, object],
+                                          Iterable[object]]
+                      ) -> "ExecutionPlan":
+        """Return a new plan with recorded ``KernelTrace``s attached to
+        the ops they name.  ``traces`` is an iterable of records (later
+        records win) or an op->trace mapping; records whose ``op`` names
+        no plan op — e.g. kernel-level ``parent/kernel`` sub-records —
+        are ignored, so a raw ``KernelRecorder.records`` list attaches
+        directly."""
+        if isinstance(traces, Mapping):
+            by_op = dict(traces)
+        else:
+            by_op = {t.op: t for t in traces}
+        layers = tuple(lp.attach_trace(by_op[lp.name])
+                       if lp.name in by_op else lp for lp in self.layers)
+        gemms = tuple(g.attach_trace(by_op[g.name])
+                      if g.name in by_op else g for g in self.gemms)
+        return dataclasses.replace(self, layers=layers, gemms=gemms)
+
+    def without_traces(self) -> "ExecutionPlan":
+        """A copy with every attached trace dropped (pure analytic plan)."""
+        return dataclasses.replace(
+            self,
+            layers=tuple(lp.attach_trace(None) for lp in self.layers),
+            gemms=tuple(g.attach_trace(None) for g in self.gemms))
 
     # ---------- heterogeneous re-planning ----------
 
@@ -192,8 +253,10 @@ class ExecutionPlan:
             elif lp.layer_index in overrides:
                 mode = ExecutionMode(overrides[lp.layer_index])
             if mode != lp.mode:
+                # A recorded trace is only valid for the mode it ran
+                # under — a mode override drops it back to analytic.
                 lp = dataclasses.replace(
-                    lp, mode=mode,
+                    lp, mode=mode, trace=None,
                     fuse_kv=mode == ExecutionMode.TILE_STREAM,
                     hbm_bytes=_predict_bytes(lp, mode, hw),
                     rewrite_cycles=_predict_rewrites(lp, mode, hw))
@@ -205,8 +268,12 @@ class ExecutionPlan:
             preceding = [lp.mode for lp in attn_by_layer.get(g.layer_index, [])
                          if lp.op_index < g.op_index]
             return preceding[-1] if preceding else g.mode
-        new_gemms = tuple(dataclasses.replace(g, mode=gemm_mode(g))
-                          for g in self.gemms)
+        def regem(g: GemmPlan) -> GemmPlan:
+            m = gemm_mode(g)
+            if m == g.mode:
+                return g
+            return dataclasses.replace(g, mode=m, trace=None)
+        new_gemms = tuple(regem(g) for g in self.gemms)
         return dataclasses.replace(self, layers=tuple(new_layers),
                                    gemms=new_gemms)
 
@@ -216,6 +283,9 @@ class ExecutionPlan:
         def enc(obj):
             d = dataclasses.asdict(obj)
             d["mode"] = obj.mode.value
+            # KernelTrace serializes via its own versioned encoder so a
+            # traced plan round-trips traces exactly (DESIGN.md §10).
+            d["trace"] = obj.trace.to_dict() if obj.trace else None
             return d
         return {
             "version": PLAN_VERSION,
@@ -233,12 +303,18 @@ class ExecutionPlan:
     def from_dict(cls, d: Mapping[str, object]) -> "ExecutionPlan":
         if d.get("version") != PLAN_VERSION:
             raise ValueError(f"unsupported plan version {d.get('version')!r}")
-        layers = tuple(
-            LayerPlan(**{**lp, "mode": ExecutionMode(lp["mode"])})
-            for lp in d["layers"])
-        gemms = tuple(
-            GemmPlan(**{**g, "mode": ExecutionMode(g["mode"])})
-            for g in d.get("gemms", []))
+
+        def dec(rec):
+            rec = dict(rec)
+            rec["mode"] = ExecutionMode(rec["mode"])
+            tr = rec.get("trace")
+            if tr is not None:
+                from repro.sim.replay import KernelTrace
+                rec["trace"] = KernelTrace.from_dict(tr)
+            return rec
+
+        layers = tuple(LayerPlan(**dec(lp)) for lp in d["layers"])
+        gemms = tuple(GemmPlan(**dec(g)) for g in d.get("gemms", []))
         return cls(model=d["model"], shape=d["shape"], hw=d["hw"],
                    hw_params=dict(d.get("hw_params", {})),
                    seq_len=int(d["seq_len"]), layers=layers, gemms=gemms)

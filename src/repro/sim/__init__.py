@@ -34,6 +34,15 @@ Module map
                  ``repro.plan.ExecutionPlan``s directly
                  (``workload_from_plan``) — into the per-layer op graphs
                  the schedulers execute.
+``replay.py``    Plan/trace replay + calibration (DESIGN.md §10):
+                 ``KernelRecorder``/``recording`` instrument the real
+                 kernel paths into per-op ``KernelTrace`` records,
+                 ``record_plan`` drives a whole plan through them,
+                 attached traces replay through ``simulate_plan`` in
+                 place of the analytic lowering, and ``fit_calibration``
+                 yields a ``CalibrationReport`` (per-op-class error +
+                 fitted per-resource cycle scales) the DSE sweep can
+                 opt into.
 
 Since PR 2 the canonical entry point is plan-driven (DESIGN.md §8):
 ``simulate_plan(repro.plan.plan_model(cfg, ...))`` executes each op under
@@ -49,7 +58,7 @@ grids lives in ``repro.dse``, which drives ``plan_model -> simulate_plan``
 per point and reads ``SimResult.energy()`` here.
 
 Out of scope (ROADMAP §Simulator): decode-step workloads, DTPU pruning
-interaction, plan/trace replay.
+interaction.
 """
 from repro.configs.hardware import (HW_PRESETS, HardwareConfig,
                                     STREAMDCIM_BASE, STREAMDCIM_SMALL,
@@ -61,6 +70,10 @@ from repro.sim.macro import MacroArray, MacroMode
 from repro.sim.pipeline import (SimResult, compare_modes, simulate,
                                 simulate_model, simulate_plan,
                                 simulate_rewrite_stall)
+from repro.sim.replay import (CalibrationReport, KernelRecorder,
+                              KernelTrace, active_recorder,
+                              analytic_op_profile, fit_calibration,
+                              record_plan, recording)
 from repro.sim.trace import Event, Trace
 from repro.sim.workload import (AttnOp, GemmOp, Layer, Workload,
                                 build_workload, workload_from_plan)
@@ -70,6 +83,9 @@ __all__ = [
     "STREAMDCIM_WIDEBUS", "ENERGY_PRESETS", "EnergyModel", "EnergyReport",
     "STREAMDCIM_ENERGY_BASE", "energy_of", "energy_of_trace", "MacroArray",
     "MacroMode", "SimResult", "compare_modes", "simulate", "simulate_model",
-    "simulate_plan", "simulate_rewrite_stall", "Event", "Trace", "AttnOp",
-    "GemmOp", "Layer", "Workload", "build_workload", "workload_from_plan",
+    "simulate_plan", "simulate_rewrite_stall", "CalibrationReport",
+    "KernelRecorder", "KernelTrace", "active_recorder",
+    "analytic_op_profile", "fit_calibration", "record_plan", "recording",
+    "Event", "Trace", "AttnOp", "GemmOp", "Layer", "Workload",
+    "build_workload", "workload_from_plan",
 ]

@@ -51,6 +51,9 @@ class SimResult:
     # The actual design point simulated (not just its name), so ad-hoc
     # sweep configs get correct energy scaling without a preset lookup.
     hw_cfg: Optional[HardwareConfig] = None
+    # Ops whose timing came from attached KernelTraces (plan/trace replay,
+    # DESIGN.md §10) rather than the analytic schedulers.
+    replayed_ops: int = 0
 
     def op_dma_bytes(self, op_name: str) -> int:
         """Simulated HBM bytes attributed to one op (tag prefix match)."""
@@ -268,22 +271,71 @@ _SCHEDULERS = {
 }
 
 
+class _CalibratedEngine(Engine):
+    """Engine whose task durations scale by a fitted per-resource factor
+    (``repro.sim.replay.CalibrationReport.scale``).  Replayed tasks are
+    recorded ground truth and bypass scaling (``exempt``)."""
+
+    def __init__(self, scale) -> None:
+        super().__init__()
+        self.scale = dict(scale)
+        self.exempt = False
+
+    def task(self, kind, resource, cycles, deps=(), nbytes=0, tag=""):
+        s = self.scale.get(resource, 1.0)
+        if cycles and not self.exempt and s != 1.0:
+            cycles = max(1, int(math.ceil(cycles * s)))
+        return super().task(kind, resource, cycles, deps, nbytes, tag)
+
+
+def _build_replay(eng: Engine, op, kt, start: int) -> int:
+    """Lower one traced op to its *recorded* timing (DESIGN.md §10): a
+    single compute event spanning ``kt.cycles`` on the op class's macro
+    resource, plus a zero-cycle HBM accounting event carrying the bytes
+    the recorded kernel actually moved (the measured wall time already
+    includes memory time — the recording platform overlaps DMA with
+    compute, so charging the span once is the honest accounting)."""
+    exempt_before = getattr(eng, "exempt", None)
+    if exempt_before is not None:
+        eng.exempt = True
+    try:
+        dma = eng.task("dma", "HBM", 0, [start], nbytes=kt.hbm_bytes,
+                       tag=f"{op.name}:replay:dma")
+        comp = eng.task("compute", kt.resource, kt.cycles, [start],
+                        tag=f"{op.name}:replay")
+        return eng.barrier([dma, comp], tag=f"{op.name}:replay:done")
+    finally:
+        if exempt_before is not None:
+            eng.exempt = exempt_before
+
+
 def _simulate_ops(wl: Workload, hw: HardwareConfig, sched_for_op,
-                  mode: Optional[ExecutionMode]) -> SimResult:
+                  mode: Optional[ExecutionMode],
+                  trace_of: Optional[Dict[str, object]] = None,
+                  scale: Optional[Dict[str, float]] = None) -> SimResult:
     """The shared per-layer scheduling loop: layers chain sequentially;
     ``sched_for_op(op)`` picks the scheduler that builds each op's task
     graph — a constant for the homogeneous paths, per-op for plan-driven
-    simulation (heterogeneous modes in one model)."""
-    eng = Engine()
+    simulation (heterogeneous modes in one model).  Ops named in
+    ``trace_of`` replay their recorded ``KernelTrace`` timing instead;
+    ``scale`` applies a fitted per-resource calibration factor to the
+    analytic (non-replayed) task durations."""
+    eng = _CalibratedEngine(scale) if scale else Engine()
     prev = eng.barrier([], tag="start")
     layer_marks: List[int] = []
+    replayed = 0
     for layer in wl.layers:
         for op in layer.ops:
-            sched = sched_for_op(op)
-            if isinstance(op, AttnOp):
-                prev = sched.build_attn(eng, op, prev)
+            kt = trace_of.get(op.name) if trace_of else None
+            if kt is not None:
+                prev = _build_replay(eng, op, kt, prev)
+                replayed += 1
             else:
-                prev = sched.build_gemm(eng, op, prev)
+                sched = sched_for_op(op)
+                if isinstance(op, AttnOp):
+                    prev = sched.build_attn(eng, op, prev)
+                else:
+                    prev = sched.build_gemm(eng, op, prev)
         prev = eng.barrier([prev], tag=f"layer{layer.index}")
         layer_marks.append(prev)
     trace = eng.run()
@@ -291,7 +343,8 @@ def _simulate_ops(wl: Workload, hw: HardwareConfig, sched_for_op,
     bounds = [0] + [finish[m] for m in layer_marks]
     per_layer = tuple(b - a for a, b in zip(bounds, bounds[1:]))
     return SimResult(wl.name, mode, hw.name, trace.makespan,
-                     trace.bytes_moved("HBM"), per_layer, trace, hw_cfg=hw)
+                     trace.bytes_moved("HBM"), per_layer, trace, hw_cfg=hw,
+                     replayed_ops=replayed)
 
 
 def simulate(wl: Workload, hw: HardwareConfig,
@@ -299,24 +352,39 @@ def simulate(wl: Workload, hw: HardwareConfig,
     return _SCHEDULERS[mode](hw).simulate(wl)
 
 
-def simulate_plan(plan, hw: Optional[HardwareConfig] = None) -> SimResult:
+def simulate_plan(plan, hw: Optional[HardwareConfig] = None, *,
+                  replay: bool = True,
+                  calibration=None) -> SimResult:
     """Execute an ``repro.plan.ExecutionPlan``: the plan's op list is
     lowered directly (``workload_from_plan``) and each op's task graph is
     built by the scheduler for *that op's* resolved mode — per-layer
-    heterogeneous modes run in one simulated model, the substrate for
-    plan/trace replay (ROADMAP §Simulator).  ``SimResult.mode`` is the
-    plan's uniform mode, or None for a heterogeneous plan."""
+    heterogeneous modes run in one simulated model.  ``SimResult.mode``
+    is the plan's uniform mode, or None for a heterogeneous plan.
+
+    Plan/trace replay (DESIGN.md §10): ops carrying an attached
+    ``KernelTrace`` (``plan.attach_traces`` / ``record_plan``) replay
+    their *recorded* timing and bytes verbatim; untraced ops keep the
+    analytic lowering — one plan mixes both.  ``replay=False`` forces
+    analytic lowering everywhere (the denominator of every calibration
+    fit).  ``calibration`` — a ``repro.sim.replay.CalibrationReport`` or
+    raw ``{resource: factor}`` mapping — scales the analytic task
+    durations by the fitted per-resource factors (replayed ops are
+    ground truth and stay untouched)."""
+    from repro.sim.replay import resolve_calibration
     from repro.sim.workload import workload_from_plan
     hw = hw or _hw_for_plan(plan)
     scheds = {m: _SCHEDULERS[m](hw) for m in ExecutionMode}
     mode_of: Dict[str, ExecutionMode] = {}
-    for lp in plan.layers:
-        mode_of[lp.name] = lp.mode
-    for g in plan.gemms:
-        mode_of[g.name] = g.mode
+    trace_of: Dict[str, object] = {}
+    for p in tuple(plan.layers) + tuple(plan.gemms):
+        mode_of[p.name] = p.mode
+        kt = getattr(p, "trace", None)
+        if replay and kt is not None:
+            trace_of[p.name] = kt
     wl = workload_from_plan(plan)
     return _simulate_ops(wl, hw, lambda op: scheds[mode_of[op.name]],
-                         plan.uniform_mode)
+                         plan.uniform_mode, trace_of=trace_of or None,
+                         scale=resolve_calibration(calibration))
 
 
 def _hw_for_plan(plan) -> HardwareConfig:

@@ -88,6 +88,19 @@ def test_choose_mode_shim_agrees_with_planner(arch):
         assert lp.mode == legacy, lp.name
 
 
+def test_streaming_shims_emit_deprecation_warnings():
+    """ISSUE-4 satellite: the ``core.streaming`` shims must announce
+    their replacement — silence kept PR-0/1 call sites on the legacy
+    path indefinitely."""
+    cfg = registry.get_config("vilbert-base")
+    with pytest.warns(DeprecationWarning, match="plan_model"):
+        streaming.choose_mode(cfg)
+    with pytest.warns(DeprecationWarning, match="attn_hbm_bytes"):
+        streaming.streamed_bytes_per_layer(
+            seq_q=256, seq_kv=256, d_model=512, num_heads=4,
+            num_kv_heads=4, head_dim=128, mode=EM.TILE_STREAM)
+
+
 def test_choose_mode_shim_still_honors_explicit_baselines():
     base = dict(name="t", family=Family.DENSE, num_layers=1, d_model=1024,
                 num_heads=8, num_kv_heads=8, d_ff=1, vocab_size=8,

@@ -1,0 +1,392 @@
+"""Plan/trace replay + calibration (ISSUE-4 acceptance, DESIGN.md §10).
+
+Pins the whole record→attach→replay→fit pipeline:
+
+* ``KernelTrace`` / ``CalibrationReport`` JSON round-trips;
+* trace attachment by op name (mismatches rejected, kernel-level
+  sub-records ignored, mode overrides drop stale traces);
+* the mixed-plan replay contract — a traced op replayed through
+  ``simulate_plan`` reproduces its recorded per-op timing and bytes
+  *exactly* while untraced ops keep the analytic lowering unchanged;
+* ExecutionPlan JSON round-trip *with attached traces*: round-trip then
+  replay reproduces per-op cycles and energy exactly (mirroring the DSE
+  frontier-replay test);
+* live recording through the instrumented kernel paths
+  (``attention_by_plan``, ``tile_gemm``, ``stream_attention``) on CPU;
+* calibration fitting and the ``repro.dse`` calibration axis.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.core.types import ExecutionMode
+from repro.plan import plan_model
+from repro.plan.planner import ExecutionPlan
+from repro.sim import simulate_plan
+from repro.sim.replay import (CalibrationReport, KernelRecorder,
+                              KernelTrace, active_recorder,
+                              analytic_op_profile, fit_calibration,
+                              record_plan, recording)
+
+SEQ = 256           # one tile block — small plans, real kernel shapes
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return plan_model(registry.get_config("vilbert-base"), seq_len=SEQ)
+
+
+def _trace_for(lp, cycles=10_000, nbytes=4096, kind="attention"):
+    return KernelTrace(op=lp.name, kind=kind, mode=lp.mode.value,
+                       grid=(1, 1, 1), block_q=getattr(lp, "block_q", 256),
+                       block_kv=getattr(lp, "block_kv", 256),
+                       cycles=cycles, hbm_bytes=nbytes, source="manual")
+
+
+def _op_events(res, name):
+    return [e for e in res.trace.events if e.op == name]
+
+
+def _op_span(res, name):
+    evs = _op_events(res, name)
+    return max(e.end for e in evs) - min(e.start for e in evs)
+
+
+def _op_busy(res, name):
+    busy = {}
+    for e in _op_events(res, name):
+        busy[e.resource] = busy.get(e.resource, 0) + e.cycles
+    return busy
+
+
+# ------------------------------------------------------------- KernelTrace
+
+def test_kernel_trace_round_trips_and_validates():
+    kt = KernelTrace(op="a", kind="gemm", mode="tile_stream", grid=(2, 3, 4),
+                     cycles=77, hbm_bytes=123, block_q=128, block_kv=256,
+                     wall_time_s=1.5e-3, flops=999)
+    back = KernelTrace.from_dict(json.loads(json.dumps(kt.to_dict())))
+    assert back == kt
+    assert back.grid == (2, 3, 4)
+    with pytest.raises(ValueError, match="kind"):
+        dataclasses.replace(kt, kind="conv")
+    with pytest.raises(ValueError, match="cycles"):
+        dataclasses.replace(kt, cycles=0)
+    with pytest.raises(ValueError, match="version"):
+        KernelTrace.from_dict({**kt.to_dict(), "version": 99})
+
+
+def test_trace_resource_follows_op_class():
+    kt = KernelTrace(op="x", kind="attention", mode="tile_stream",
+                     grid=(1,), block_q=1, block_kv=1, cycles=1,
+                     hbm_bytes=0, source="manual")
+    assert kt.resource == "ATTN"
+    assert dataclasses.replace(kt, kind="gemm").resource == "GEN"
+
+
+# -------------------------------------------------------------- attachment
+
+def test_attach_traces_by_name_ignores_kernel_level_records(plan):
+    lp = plan.layers[0]
+    kt = _trace_for(lp)
+    sub = dataclasses.replace(kt, op=f"{lp.name}/stream_attention")
+    traced = plan.attach_traces([kt, sub])
+    assert traced.traced_ops == (lp.name,)
+    assert traced.layers[0].trace == kt
+    assert traced.summary()["traced_ops"] == 1
+    assert plan.summary()["traced_ops"] == 0     # original untouched
+
+
+def test_attach_trace_rejects_wrong_op(plan):
+    with pytest.raises(ValueError, match="cannot attach"):
+        plan.layers[1].attach_trace(_trace_for(plan.layers[0]))
+
+
+def test_without_traces_drops_everything(plan):
+    traced = plan.attach_traces([_trace_for(lp) for lp in plan.layers[:3]])
+    assert len(traced.traced_ops) == 3
+    assert traced.without_traces().traced_ops == ()
+
+
+def test_mode_override_drops_stale_trace(plan):
+    lp0, lp1 = plan.layers[0], plan.layers[1]
+    traced = plan.attach_traces([_trace_for(lp0), _trace_for(lp1)])
+    het = traced.with_layer_modes({lp0.name: ExecutionMode.NON_STREAM})
+    assert het.layer(lp0.name).trace is None      # recorded mode changed
+    assert het.layer(lp1.name).trace is not None  # untouched layer keeps it
+
+
+# ------------------------------------------------------- mixed-plan replay
+
+def test_mixed_plan_replays_traced_ops_exactly(plan):
+    """The acceptance criterion: traced ops reproduce recorded per-op
+    timing and bytes exactly; untraced ops fall back to analytic lowering
+    with identical per-op schedules — both in ONE plan."""
+    lp0, lp1 = plan.layers[0], plan.layers[1]
+    g0 = plan.gemms[0]
+    traces = [_trace_for(lp0, cycles=31_415, nbytes=2_718),
+              _trace_for(g0, cycles=141, nbytes=59, kind="gemm")]
+    traced = plan.attach_traces(traces)
+    analytic = simulate_plan(plan)
+    mixed = simulate_plan(traced)
+
+    assert analytic.replayed_ops == 0
+    assert mixed.replayed_ops == 2
+    # Replayed ops: recorded timing/bytes verbatim, on the op class's
+    # macro resource.
+    assert _op_span(mixed, lp0.name) == 31_415
+    assert mixed.op_dma_bytes(lp0.name) == 2_718
+    assert _op_busy(mixed, lp0.name) == {"ATTN": 31_415, "HBM": 0}
+    assert _op_span(mixed, g0.name) == 141
+    assert _op_busy(mixed, g0.name) == {"GEN": 141, "HBM": 0}
+    # Untraced ops: the analytic schedule, unchanged event for event.
+    assert _op_busy(mixed, lp1.name) == _op_busy(analytic, lp1.name)
+    assert _op_span(mixed, lp1.name) == _op_span(analytic, lp1.name)
+    assert mixed.op_dma_bytes(lp1.name) == analytic.op_dma_bytes(lp1.name)
+    # Total = analytic total shifted by the replayed ops' deltas.
+    delta = (31_415 - _op_span(analytic, lp0.name)
+             + 141 - _op_span(analytic, g0.name))
+    assert mixed.cycles == analytic.cycles + delta
+
+
+def test_replay_flag_forces_analytic_lowering(plan):
+    traced = plan.attach_traces([_trace_for(plan.layers[0])])
+    assert simulate_plan(traced, replay=False).cycles \
+        == simulate_plan(plan).cycles
+    assert simulate_plan(traced, replay=False).replayed_ops == 0
+
+
+def test_json_round_trip_with_traces_replays_exactly(plan):
+    """ISSUE-4 satellite: plan -> to_json -> from_json -> simulate_plan
+    reproduces per-op cycles AND energy exactly (the DSE frontier-replay
+    guarantee extended to traced plans)."""
+    traces = [_trace_for(lp, cycles=1000 + 7 * i, nbytes=100 + i)
+              for i, lp in enumerate(plan.layers[:4])]
+    traces.append(_trace_for(plan.gemms[0], cycles=777, nbytes=31,
+                             kind="gemm"))
+    traced = plan.attach_traces(traces)
+    back = ExecutionPlan.from_json(traced.to_json())
+    assert back == traced                       # traces round-trip exactly
+
+    res0, res1 = simulate_plan(traced), simulate_plan(back)
+    assert res1.cycles == res0.cycles
+    assert res1.hbm_bytes == res0.hbm_bytes
+    assert res1.replayed_ops == res0.replayed_ops == 5
+    for kt in traces:
+        assert _op_span(res1, kt.op) == kt.cycles
+        assert res1.op_dma_bytes(kt.op) == kt.hbm_bytes
+    e0, e1 = res0.energy(), res1.energy()
+    assert e1.total_pj == e0.total_pj
+    assert e1.by_op == e0.by_op
+
+
+# ---------------------------------------------------------- live recording
+
+def test_record_plan_records_and_attaches(plan):
+    traced, rec = record_plan(plan, max_ops=2, iters=1, warmup=0)
+    assert len(traced.traced_ops) == 2
+    for kt in (traced.layers[0].trace, traced.layers[1].trace):
+        assert kt.kind == "attention"
+        assert kt.cycles > 0 and kt.wall_time_s > 0
+        assert kt.source == "wall_time"
+        assert kt.mode == "tile_stream"
+        # grid: (batch, ceil(Sq/bq), ceil(Skv/bkv)) at the plan geometry
+        assert kt.grid == (1, 1, 1) and kt.block_q == SEQ
+        assert kt.hbm_bytes > 0
+    res = simulate_plan(traced)
+    assert res.replayed_ops == 2
+    assert _op_span(res, traced.traced_ops[0]) \
+        == traced.layers[0].trace.cycles
+
+
+def test_record_plan_gemm_selection():
+    plan = plan_model(registry.get_config("vilbert-base"), seq_len=SEQ)
+    g = plan.gemms[0]
+    traced, rec = record_plan(plan, ops=[g.name], iters=1, warmup=0)
+    assert traced.traced_ops == (g.name,)
+    kt = traced.gemms[0].trace
+    assert kt.kind == "gemm"
+    assert kt.flops == 2 * g.m * g.k * g.n
+    # grid/tiling mirror the tile_gemm launch at its default blocks, and
+    # bytes follow the kernel-level x + w + out convention.
+    bm, bn, bk = min(256, g.m), min(256, g.n), min(512, g.k)
+    assert kt.grid == (-(-g.n // bn), -(-g.m // bm), -(-g.k // bk))
+    assert kt.block_q == bm and kt.block_kv == bn
+    assert kt.hbm_bytes == 4 * (g.m * g.k + g.k * g.n + g.m * g.n)
+
+
+def test_recorder_inactive_outside_block():
+    assert active_recorder() is None
+    with recording() as rec:
+        assert active_recorder() is rec
+    assert active_recorder() is None
+
+
+def test_attention_by_plan_not_recorded_under_jit(plan):
+    from repro.kernels import ops
+    lp = plan.layers[0]
+    q = jnp.ones((1, 2, 8, 16))
+    x = jnp.ones((1, 8, 32))
+    wk = jnp.ones((32, 2, 16)) * 0.1
+    wv = jnp.ones((32, 2, 16)) * 0.1
+    with recording() as rec:
+        jax.jit(lambda *a: ops.attention_by_plan(lp, *a))(q, x, wk, wv)
+    assert rec.records == []                    # tracers: nothing to time
+    with recording() as rec:
+        ops.attention_by_plan(lp, q, x, wk, wv)
+    assert [t.op for t in rec.records] == [lp.name]
+
+
+def test_tile_gemm_kernel_level_instrumentation():
+    from repro.kernels.tile_gemm import tile_gemm
+    x = jnp.ones((128, 128), jnp.float32)
+    w = jnp.ones((128, 128), jnp.float32)
+    with recording(KernelRecorder(iters=1, warmup=0)) as rec:
+        tile_gemm(x, w, block_m=128, block_n=128, block_k=128,
+                  interpret=True)
+        with rec.label("ffn_up"):
+            tile_gemm(x, w, block_m=64, block_n=64, block_k=64,
+                      interpret=True)
+    assert [t.op for t in rec.records] == ["tile_gemm", "ffn_up/tile_gemm"]
+    assert rec.records[0].grid == (1, 1, 1)
+    assert rec.records[1].grid == (2, 2, 2)
+    assert rec.records[1].block_q == 64
+    assert all(t.kind == "gemm" and t.cycles > 0 for t in rec.records)
+
+
+def test_stream_attention_kernel_level_instrumentation():
+    from repro.kernels.stream_attention import stream_attention
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 128))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 128))
+    wk = jax.random.normal(jax.random.PRNGKey(2), (128, 2, 128)) * 0.1
+    wv = jax.random.normal(jax.random.PRNGKey(3), (128, 2, 128)) * 0.1
+    with recording(KernelRecorder(iters=1, warmup=0)) as rec:
+        stream_attention(q, x, wk, wv, block_q=128, block_k=128,
+                         interpret=True)
+    (kt,) = rec.records
+    assert kt.op == "stream_attention"
+    assert kt.kind == "attention" and kt.mode == "tile_stream"
+    assert kt.grid == (1, 1, 1) and kt.cycles > 0
+
+
+def test_measure_suppresses_nested_kernel_records():
+    from repro.kernels.tile_gemm import tile_gemm
+    x = jnp.ones((64, 64), jnp.float32)
+    with recording(KernelRecorder(iters=1, warmup=0)) as rec:
+        rec.measure(lambda: tile_gemm(x, x, interpret=True),
+                    op="outer", kind="gemm")
+    assert [t.op for t in rec.records] == ["outer"]   # no inner tile_gemm
+
+
+# -------------------------------------------------------------- calibration
+
+def test_fit_calibration_identity_when_recorded_equals_analytic(plan):
+    """Synthetic traces whose cycles equal the analytic per-op span: the
+    fitted report shows ratio 1 / zero error, and the fitted per-resource
+    scales leave the simulated latency (nearly) unchanged."""
+    prof = analytic_op_profile(plan)
+    names = [lp.name for lp in plan.layers[:3]]
+    traced = plan.attach_traces(
+        [_trace_for(lp, cycles=prof[lp.name]["span"])
+         for lp in plan.layers[:3]])
+    rep = fit_calibration(traced)
+    assert rep.traced_ops == 3
+    assert rep.per_class["attention"]["mean_abs_rel_err"] == 0.0
+    assert rep.ratio("attention") == 1.0
+    base = simulate_plan(plan).cycles
+    calibrated = simulate_plan(plan, calibration=rep).cycles
+    assert abs(calibrated - base) / base < 0.05
+    assert names  # (silences linters; names used for readability above)
+
+
+def test_fit_calibration_requires_traces(plan):
+    with pytest.raises(ValueError, match="no attached KernelTrace"):
+        fit_calibration(plan)
+
+
+def test_calibration_report_json_round_trip(plan):
+    traced, _ = record_plan(plan, max_ops=1, iters=1, warmup=0)
+    rep = fit_calibration(traced)
+    back = CalibrationReport.from_json(rep.to_json())
+    assert back.to_dict() == rep.to_dict()
+    assert back.scale == rep.scale
+    with pytest.raises(ValueError, match="version"):
+        CalibrationReport.from_dict({**rep.to_dict(), "version": 99})
+
+
+def test_calibration_scales_analytic_timing(plan):
+    base = simulate_plan(plan)
+    same = simulate_plan(plan, calibration={"ATTN": 1.0, "HBM": 1.0})
+    assert same.cycles == base.cycles
+    slower = simulate_plan(plan, calibration={"ATTN": 2.0, "GEN": 2.0,
+                                              "HBM": 2.0, "NOC": 2.0,
+                                              "BUS": 2.0})
+    assert slower.cycles > base.cycles
+    # Replayed ops are recorded ground truth: calibration leaves them be.
+    traced = plan.attach_traces([_trace_for(plan.layers[0], cycles=555)])
+    scaled = simulate_plan(traced, calibration={"ATTN": 3.0})
+    assert _op_span(scaled, plan.layers[0].name) == 555
+
+
+def test_calibration_rejects_garbage(plan):
+    with pytest.raises(TypeError, match="CalibrationReport"):
+        simulate_plan(plan, calibration=42)
+    with pytest.raises(ValueError, match="scale"):
+        CalibrationReport(name="x", model="m", hw="h", clock_hz=1e9,
+                          per_class={}, scale={"ATTN": -1.0})
+
+
+# ----------------------------------------------------- dse calibration axis
+
+def test_dse_calibration_axis_partitions_rows():
+    from repro.dse import Axes, run_sweep, simulate_point
+    from repro.configs.hardware import STREAMDCIM_BASE
+    cfg = registry.get_config("whisper-base")
+    cal = CalibrationReport(
+        name="cal-test", model=cfg.name, hw="streamdcim-base",
+        clock_hz=1e9, per_class={},
+        scale={"ATTN": 2.0, "GEN": 2.0, "HBM": 2.0})
+
+    row0 = simulate_point(cfg, STREAMDCIM_BASE, seq_len=SEQ)
+    row1 = simulate_point(cfg, STREAMDCIM_BASE, seq_len=SEQ,
+                          calibration=cal)
+    assert row0.calibration == "analytic"
+    assert row0.calibration_scale == {}
+    assert row1.calibration == "cal-test"
+    assert row1.latency_cycles > row0.latency_cycles
+    assert "calibration" in row0.to_dict()
+    # A calibrated row is reproducible from the artifact alone: replay
+    # its plan_json under its recorded calibration_scale.
+    replayed = simulate_plan(ExecutionPlan.from_json(row1.plan_json),
+                             calibration=row1.calibration_scale)
+    assert replayed.cycles == row1.latency_cycles
+    # Distinct raw mappings get distinct labels (never one "custom" cell).
+    rowa = simulate_point(cfg, STREAMDCIM_BASE, seq_len=SEQ,
+                          calibration={"ATTN": 2.0})
+    rowb = simulate_point(cfg, STREAMDCIM_BASE, seq_len=SEQ,
+                          calibration={"ATTN": 8.0})
+    assert rowa.calibration == "custom:ATTNx2"
+    assert rowb.calibration == "custom:ATTNx8"
+    assert rowa.calibration != rowb.calibration
+
+    axes = Axes(groups=((2, 1), (4, 2)), rewrite_bus_bits=(512,),
+                ping_pong=(True,))
+    sweep = run_sweep(models=[cfg.name], axes=axes, seq_lens=(SEQ,),
+                      include_presets=False, calibrations=(None, cal))
+    assert sweep.calibrations() == ["analytic", "cal-test"]
+    assert len(sweep.rows) == 4                  # 2 points x 2 calibrations
+    # Frontier/knee extraction never mixes calibrations: each cell is
+    # labeled, and analytic rows (always faster here) must not dominate
+    # the calibrated cell away.
+    pareto_a = sweep.pareto(cfg.name, SEQ, "analytic")
+    pareto_c = sweep.pareto(cfg.name, SEQ, "cal-test")
+    assert pareto_a and pareto_c
+    assert all(r.calibration == "cal-test" for r in pareto_c)
+    labels = set(sweep.knees())
+    assert f"{cfg.name}+analytic" in labels
+    assert f"{cfg.name}+cal-test" in labels
+    assert set(sweep.to_dict()["pareto"]) == labels
