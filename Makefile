@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke replay-smoke
+.PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke \
+	replay-smoke serve-smoke
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -30,3 +31,9 @@ dse-smoke:
 # replay it through the simulator, emit the CalibrationReport artifact.
 replay-smoke:
 	$(PYTHON) benchmarks/run.py replay --json replay_report.json
+
+# Continuous-batching serving smoke (DESIGN.md §11): staggered-arrival
+# trace through the live engine AND simulate_serve; asserts the two agree
+# on the step timeline and emits the serving artifact.
+serve-smoke:
+	$(PYTHON) benchmarks/run.py serve --json serve_report.json

@@ -24,21 +24,28 @@ from benchmarks.common import csv_row, log_dse
 
 
 def run(points: Optional[int] = None) -> List[str]:
+    from repro.configs.registry import ENERGY_CONFIGS
     from repro.dse import run_sweep
-    result = run_sweep(points=points)
+    # The ROADMAP's joint sweep: every energy preset folds over every
+    # simulated design point (the simulation runs once per point — the
+    # energy axis is a re-fold, so 3x the rows, not 3x the runtime).
+    result = run_sweep(points=points,
+                       energy_models=list(ENERGY_CONFIGS.values()))
     log_dse(result)
 
     rows: List[str] = []
+    base_em = result.energy_model
     rows.append(csv_row(
         "dse_grid", 0.0,
-        f"{len(result.rows)} rows ({len(result.models())} models); "
+        f"{len(result.rows)} rows ({len(result.models())} models x "
+        f"{len(result.energy_models())} energy tables); "
         f"{len(result.skipped)} invalid combos skipped; "
-        f"energy model {result.energy_model}"))
+        f"base energy model {base_em}"))
     knees = result.knees()
     for model, seq_len in result.groups():
-        label = result.label(model, seq_len)
-        mrows = result.rows_for(model, seq_len)
-        frontier = result.pareto(model, seq_len)
+        label = result.label(model, seq_len, energy_model=base_em)
+        mrows = result.rows_for(model, seq_len, energy_model=base_em)
+        frontier = result.pareto(model, seq_len, energy_model=base_em)
         fastest = min(mrows, key=lambda r: r.latency_cycles)
         frugal = min(mrows, key=lambda r: r.energy_pj)
         rows.append(csv_row(
@@ -63,6 +70,18 @@ def run(points: Optional[int] = None) -> List[str]:
                 f"dse_{label}_pingpong_edp", 0.0,
                 f"ping-pong EDP {nopp.edp / pp.edp:.2f}x better at "
                 f"base geometry"))
+    # Frontier sensitivity to the pJ-cost table (ROADMAP item): how much
+    # of the Pareto frontier survives swapping the energy model.
+    for label, rec in result.frontier_sensitivity().items():
+        worst = min((j for em, j in rec["jaccard_vs_base"].items()
+                     if em != rec["base"]), default=1.0)
+        rows.append(csv_row(
+            f"dse_{label}_energy_sensitivity", 0.0,
+            f"frontier jaccard >= {worst:.2f} across "
+            f"{len(rec['jaccard_vs_base'])} cost tables; "
+            f"{len(rec['stable_hw'])} designs stable on every table "
+            f"({', '.join(rec['stable_hw'][:3])}"
+            f"{'...' if len(rec['stable_hw']) > 3 else ''})"))
     return rows
 
 

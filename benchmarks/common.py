@@ -57,6 +57,12 @@ DSE_LOG: list = []
 # replay-smoke step uploads (DESIGN.md §10).
 REPLAY_LOG: list = []
 
+# The serve section registers (Engine, ServeSimResult) pairs so
+# ``run.py --json`` can emit the serving artifact (per-step records with
+# predicted-vs-simulated decode bytes) the CI serve-smoke step uploads
+# (DESIGN.md §11).
+SERVE_LOG: list = []
+
 
 def log_plan(plan) -> None:
     """Register an ``repro.plan.ExecutionPlan`` for the --json report."""
@@ -73,7 +79,13 @@ def log_replay(traced_plan, report) -> None:
     REPLAY_LOG.append((traced_plan, report))
 
 
+def log_serve(engine, sim_result) -> None:
+    """Register a served ``Engine`` + its ``ServeSimResult`` for --json."""
+    SERVE_LOG.append((engine, sim_result))
+
+
 def reset_plan_log() -> None:
     PLAN_LOG.clear()
     DSE_LOG.clear()
     REPLAY_LOG.clear()
+    SERVE_LOG.clear()

@@ -34,7 +34,7 @@ def _sections(points=None):
 
     from benchmarks import (bench_decode, bench_dse, bench_kernels,
                             bench_pruning, bench_replay,
-                            bench_rewrite_overlap, bench_sim,
+                            bench_rewrite_overlap, bench_serve, bench_sim,
                             bench_stream_modes, roofline)
     return [
         ("bench_stream_modes", "Fig6/Fig7 stream-mode comparison",
@@ -49,6 +49,8 @@ def _sections(points=None):
          functools.partial(bench_dse.run, points=points)),
         ("replay", "Plan/trace replay + calibration (record real kernels)",
          bench_replay.run),
+        ("serve", "Continuous-batching serving (engine vs simulate_serve)",
+         bench_serve.run),
         ("bench_decode", "Decode regime (tile-stream latency win)",
          bench_decode.run),
         ("bench_kernels", "Kernel micro-benchmarks", bench_kernels.run),
@@ -129,6 +131,13 @@ def main(argv=None) -> None:
         report["plans"] = [p.summary() for p in common.PLAN_LOG]
         if common.DSE_LOG:
             report["dse"] = common.DSE_LOG[-1].to_dict()
+        if common.SERVE_LOG:
+            # The serving artifact (DESIGN.md §11): the engine's executed
+            # timeline next to the simulator's — per-step records carry
+            # predicted vs simulated decode HBM bytes (CI uploads this).
+            report["serve"] = [
+                {"engine": eng.stats(), "sim": sim.to_dict()}
+                for eng, sim in common.SERVE_LOG]
         if common.REPLAY_LOG:
             # The calibration artifact (DESIGN.md §10): one entry per
             # recorded model — the fitted CalibrationReport plus the

@@ -1,8 +1,10 @@
 """Batched serving example (deliverable b): a small LM served with the
-continuous-batching engine — prefill under the planner-resolved execution
-mode (TILE_STREAM cross-forwarding where profitable) + cached decode over
-batched requests.  The engine re-plans per admitted wave's prompt shape;
-pass ``plan=`` to pin one ``ExecutionPlan`` instead (DESIGN.md §8).
+slot-level continuous-batching engine — per-admission prefill under the
+planner-resolved ``ExecutionPlan`` (per-layer modes, TILE_STREAM
+cross-forwarding where profitable), per-step ``DecodePlan``s, immediate
+slot recycling (DESIGN.md §11).  Requests are admitted into free slots
+while other slots are mid-decode; pass ``plan=`` to pin one
+``ExecutionPlan`` instead of re-planning per prompt length.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -31,7 +33,8 @@ def main():
                     prompt=rng.integers(0, cfg.vocab_size,
                                         size=(int(rng.integers(4, 24)),))
                     .astype(np.int32),
-                    max_new_tokens=12)
+                    max_new_tokens=int(rng.integers(4, 16)),
+                    arrival_step=int(rng.integers(0, 6)))
             for i in range(8)]
     for r in reqs:
         eng.submit(r)
@@ -40,8 +43,11 @@ def main():
     done = eng.run()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
+    st = eng.stats()
     print(f"served {len(done)} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s on CPU)")
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s on CPU); "
+          f"{st['steps']} steps, {st['decode_calls']} decode calls, "
+          f"peak concurrency {st['max_concurrency']}")
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
 

@@ -17,7 +17,13 @@ Artifacts per sweep:
                       -> ``simulate_plan`` reproduces the row exactly);
 * Pareto frontier   — non-dominated (latency, energy) rows per model;
 * utilization knee  — the smallest design point within 10% of the best
-                      latency per model (ROADMAP §Simulator).
+                      latency per model (ROADMAP §Simulator);
+* cost-table axis   — ``run_sweep(energy_models=...)`` folds every
+                      ``EnergyModel`` over each simulated point (one
+                      simulation per point; energy re-folds) and
+                      ``SweepResult.frontier_sensitivity()`` reports how
+                      much of the frontier survives swapping the table
+                      (``python -m repro.dse --energy-axis``).
 
 Entry points: ``python -m repro.dse`` and ``benchmarks/run.py dse``
 (``--json`` artifact, ``--points N`` budget for CI smoke).

@@ -16,14 +16,16 @@ from repro.sim.energy import ENERGY_PRESETS
 
 
 def format_table(result, model: str, seq_len: int, knees=None,
-                 calibration: str = None) -> str:
+                 calibration: str = None,
+                 energy_model: str = None) -> str:
     knees = result.knees() if knees is None else knees
-    rows = result.rows_for(model, seq_len, calibration)
-    frontier = set(id(r) for r in result.pareto(model, seq_len, calibration))
-    knee = knees.get(result.label(model, seq_len, calibration))
-    lines = [f"== {result.label(model, seq_len, calibration)} "
+    rows = result.rows_for(model, seq_len, calibration, energy_model)
+    frontier = set(id(r) for r in result.pareto(model, seq_len, calibration,
+                                               energy_model))
+    knee = knees.get(result.label(model, seq_len, calibration, energy_model))
+    lines = [f"== {result.label(model, seq_len, calibration, energy_model)} "
              f"({len(rows)} points, "
-             f"energy model {result.energy_model}) ==",
+             f"energy model {energy_model or result.energy_model}) ==",
              f"{'':2s}{'design point':<42s} {'cycles':>12s} {'energy(uJ)':>11s} "
              f"{'EDP':>10s} {'utilGEN':>8s} {'utilATTN':>9s}"]
     for r in sorted(rows, key=lambda r: r.latency_cycles):
@@ -53,6 +55,10 @@ def main(argv=None) -> None:
     ap.add_argument("--energy", default="streamdcim-energy-base",
                     choices=sorted(ENERGY_PRESETS),
                     help="energy model preset")
+    ap.add_argument("--energy-axis", action="store_true",
+                    help="sweep EVERY energy preset as a joint axis with "
+                         "the hardware grid and report frontier "
+                         "sensitivity to the cost table (ROADMAP)")
     ap.add_argument("--calibration", metavar="PATH", default=None,
                     help="CalibrationReport JSON (repro.sim.replay) — "
                          "sweeps the analytic AND the trace-calibrated "
@@ -74,17 +80,33 @@ def main(argv=None) -> None:
         done[0] += 1
         print(f"\r  {done[0]} points simulated", end="", file=sys.stderr)
 
+    energy_models = None
+    if args.energy_axis:
+        # --energy stays the *base* table (leads the axis: ordering and
+        # frontier_sensitivity compare the other presets against it).
+        base = ENERGY_PRESETS[args.energy]
+        energy_models = [base] + [e for e in ENERGY_PRESETS.values()
+                                  if e.name != base.name]
     result = run_sweep(models=args.models, axes=DEFAULT_AXES,
                        points=args.points, seq_lens=args.seq,
                        energy_model=ENERGY_PRESETS[args.energy],
+                       energy_models=energy_models,
                        calibrations=calibrations, progress=progress)
     print(file=sys.stderr)
     knees = result.knees()
     for model, seq_len in result.groups():
         for cal in result.calibrations():
-            print(format_table(result, model, seq_len, knees=knees,
-                               calibration=cal))
-            print()
+            for em in result.energy_models():
+                print(format_table(result, model, seq_len, knees=knees,
+                                   calibration=cal, energy_model=em))
+                print()
+    sens = result.frontier_sensitivity()
+    for label, rec in sens.items():
+        print(f"== {label}: frontier sensitivity to the cost table ==")
+        for em, j in rec["jaccard_vs_base"].items():
+            print(f"   {em:<28s} jaccard vs {rec['base']}: {j:.2f} "
+                  f"({len(rec['frontier_hw'][em])} frontier designs)")
+        print(f"   stable across all tables: {rec['stable_hw']}")
     if result.skipped:
         print(f"# {len(result.skipped)} invalid grid combinations skipped")
     if args.json:

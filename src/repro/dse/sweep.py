@@ -239,70 +239,130 @@ class SweepResult:
                 seen.append(r.calibration)
         return seen
 
-    def _cells(self) -> List[Tuple[str, int, str]]:
-        """(model, seq_len, calibration) cells that actually have rows."""
+    def energy_models(self) -> List[str]:
+        """Distinct energy-model labels in row order.  The fourth
+        partition key (ROADMAP: ENERGY_CONFIGS x HW grid): energy_pj
+        values under different pJ-cost tables are not comparable, so
+        frontier/knee extraction never mixes them."""
+        seen: List[str] = []
+        for r in self.rows:
+            if r.energy_model not in seen:
+                seen.append(r.energy_model)
+        return seen
+
+    def _cells(self) -> List[Tuple[str, int, str, str]]:
+        """(model, seq_len, calibration, energy_model) cells with rows."""
         cals = self.calibrations()
-        return [(m, s, c) for m, s in self.groups() for c in cals
+        ems = self.energy_models()
+        return [(m, s, c, e) for m, s in self.groups() for c in cals
+                for e in ems
                 if any(r.model == m and r.seq_len == s
-                       and r.calibration == c for r in self.rows)]
+                       and r.calibration == c and r.energy_model == e
+                       for r in self.rows)]
 
     def label(self, model: str, seq_len: int,
-              calibration: Optional[str] = None) -> str:
+              calibration: Optional[str] = None,
+              energy_model: Optional[str] = None) -> str:
         """Group label for reports: just the model name when one shape
-        was swept, ``model@seqN`` when several disambiguate, and a
-        ``+calibration`` suffix when the sweep ran a calibration axis."""
+        was swept, ``model@seqN`` when several disambiguate, a
+        ``+calibration`` suffix when the sweep ran a calibration axis,
+        and a ``/energy-model`` suffix when it ran the energy axis."""
         multi = len({s for m, s in self.groups() if m == model}) > 1
         lbl = f"{model}@seq{seq_len}" if multi else model
         if calibration is not None and len(self.calibrations()) > 1:
             lbl += f"+{calibration}"
+        if energy_model is not None and len(self.energy_models()) > 1:
+            lbl += f"/{energy_model}"
         return lbl
 
     def rows_for(self, model: str, seq_len: Optional[int] = None,
-                 calibration: Optional[str] = None) -> List[SweepRow]:
+                 calibration: Optional[str] = None,
+                 energy_model: Optional[str] = None) -> List[SweepRow]:
         return [r for r in self.rows if r.model == model
                 and (seq_len is None or r.seq_len == seq_len)
-                and (calibration is None or r.calibration == calibration)]
+                and (calibration is None or r.calibration == calibration)
+                and (energy_model is None
+                     or r.energy_model == energy_model)]
 
     def pareto(self, model: Optional[str] = None,
                seq_len: Optional[int] = None,
-               calibration: Optional[str] = None) -> List[SweepRow]:
+               calibration: Optional[str] = None,
+               energy_model: Optional[str] = None) -> List[SweepRow]:
         """Latency/energy frontier, computed per (model, seq_len,
-        calibration) cell and concatenated in cell order over whatever
-        ``model`` / ``seq_len`` / ``calibration`` leave unfixed."""
+        calibration, energy_model) cell and concatenated in cell order
+        over whatever arguments are left unfixed."""
         out: List[SweepRow] = []
-        for m, s, c in self._cells():
+        for m, s, c, e in self._cells():
             if (model is None or m == model) \
                     and (seq_len is None or s == seq_len) \
-                    and (calibration is None or c == calibration):
-                out.extend(pareto_frontier(self.rows_for(m, s, c)))
+                    and (calibration is None or c == calibration) \
+                    and (energy_model is None or e == energy_model):
+                out.extend(pareto_frontier(self.rows_for(m, s, c, e)))
         return out
 
     def knees(self) -> Dict[str, SweepRow]:
         out: Dict[str, SweepRow] = {}
-        for m, s, c in self._cells():
-            knee = utilization_knee(self.rows_for(m, s, c),
+        for m, s, c, e in self._cells():
+            knee = utilization_knee(self.rows_for(m, s, c, e),
                                     self.knee_tolerance)
             if knee is not None:
-                out[self.label(m, s, c)] = knee
+                out[self.label(m, s, c, e)] = knee
+        return out
+
+    def frontier_sensitivity(self) -> Dict[str, Dict[str, object]]:
+        """How sensitive the Pareto frontier is to the energy cost table
+        (the ROADMAP's ENERGY_CONFIGS x HW question): per (model, shape,
+        calibration) group, the frontier's design-point names under each
+        energy model, the Jaccard overlap of each against the base
+        (first-swept) model's frontier, and the designs stable across
+        *every* cost table.  Empty when only one energy model was swept
+        (nothing to compare)."""
+        ems = self.energy_models()
+        if len(ems) < 2:
+            return {}
+        base = ems[0]
+        out: Dict[str, Dict[str, object]] = {}
+        for m, s in self.groups():
+            for c in self.calibrations():
+                fronts = {e: sorted({r.hw for r in pareto_frontier(
+                    self.rows_for(m, s, c, e))}) for e in ems
+                    if self.rows_for(m, s, c, e)}
+                if len(fronts) < 2 or base not in fronts:
+                    continue
+                bset = set(fronts[base])
+                jac = {}
+                for e, hws in fronts.items():
+                    u = bset | set(hws)
+                    jac[e] = (len(bset & set(hws)) / len(u)) if u else 1.0
+                stable = sorted(set.intersection(
+                    *[set(h) for h in fronts.values()]))
+                out[self.label(m, s, c)] = {
+                    "base": base,
+                    "frontier_hw": fronts,
+                    "jaccard_vs_base": jac,
+                    "stable_hw": stable,
+                }
         return out
 
     def to_dict(self) -> Dict[str, object]:
         # Frontier members ARE entries of self.rows: index by identity
         # (value-equality .index() would deep-compare plan JSON, O(rows^2)).
         index_of = {id(r): i for i, r in enumerate(self.rows)}
-        pareto_ids = {self.label(m, s, c):
+        pareto_ids = {self.label(m, s, c, e):
                       [index_of[id(r)]
-                       for r in pareto_frontier(self.rows_for(m, s, c))]
-                      for m, s, c in self._cells()}
+                       for r in pareto_frontier(self.rows_for(m, s, c, e))]
+                      for m, s, c, e in self._cells()}
         return {
             "energy_model": self.energy_model,
+            "energy_models": self.energy_models(),
             "num_rows": len(self.rows),
             "calibrations": self.calibrations(),
             "rows": [r.to_dict() for r in self.rows],
             "skipped": list(self.skipped),
-            "pareto": pareto_ids,  # row indices, per (model, shape, cal)
+            "pareto": pareto_ids,  # row indices, per (model, shape, cal, em)
             "knees": {m: r.to_dict() for m, r in self.knees().items()},
             "knee_tolerance": self.knee_tolerance,
+            "frontier_sensitivity": self.frontier_sensitivity(),
         }
 
 
@@ -325,6 +385,37 @@ def calibration_label(calibration) -> str:
                                 for r, s in sorted(calibration.items()))
 
 
+def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
+                energy_models: Sequence[EnergyModel],
+                calibration=None) -> List[SweepRow]:
+    """One (model config, design point, shape) evaluation through the
+    canonical path — ``plan_model`` -> ``simulate_plan`` -> energy fold —
+    returning one row per energy model.  The simulation runs *once*; the
+    energy axis is a pure re-fold of the same trace under each pJ-cost
+    table (latency/bytes are cost-table-invariant by construction)."""
+    from repro.plan.planner import plan_model
+    from repro.sim.pipeline import simulate_plan
+    from repro.sim.replay import resolve_calibration
+    plan = plan_model(cfg, hw=hw, seq_len=seq_len)
+    res = simulate_plan(plan, hw=hw, calibration=calibration)
+    scale = resolve_calibration(calibration)
+    plan_json = plan.to_json()
+    rows = []
+    for em in energy_models:
+        rep = res.energy(em)
+        rows.append(SweepRow(
+            model=cfg.name, seq_len=seq_len, hw=hw.name,
+            hw_params=dataclasses.asdict(hw), energy_model=em.name,
+            latency_cycles=res.cycles, hbm_bytes=res.hbm_bytes,
+            energy_pj=rep.total_pj, edp=rep.edp,
+            utilization=res.trace.utilizations(),
+            energy_by_resource=dict(rep.by_resource),
+            plan_json=plan_json,
+            calibration=calibration_label(calibration),
+            calibration_scale=dict(scale) if scale else {}))
+    return rows
+
+
 def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
                    energy_model: Optional[EnergyModel] = None,
                    calibration=None) -> SweepRow:
@@ -334,24 +425,8 @@ def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
     resource->factor mapping) scales the analytic timing by the fitted
     per-resource factors — the trace-calibrated sweep axis (DESIGN.md
     §10)."""
-    from repro.plan.planner import plan_model
-    from repro.sim.pipeline import simulate_plan
-    from repro.sim.replay import resolve_calibration
     em = energy_model or STREAMDCIM_ENERGY_BASE
-    plan = plan_model(cfg, hw=hw, seq_len=seq_len)
-    res = simulate_plan(plan, hw=hw, calibration=calibration)
-    rep = res.energy(em)
-    scale = resolve_calibration(calibration)
-    return SweepRow(
-        model=cfg.name, seq_len=seq_len, hw=hw.name,
-        hw_params=dataclasses.asdict(hw), energy_model=em.name,
-        latency_cycles=res.cycles, hbm_bytes=res.hbm_bytes,
-        energy_pj=rep.total_pj, edp=rep.edp,
-        utilization=res.trace.utilizations(),
-        energy_by_resource=dict(rep.by_resource),
-        plan_json=plan.to_json(),
-        calibration=calibration_label(calibration),
-        calibration_scale=dict(scale) if scale else {})
+    return _point_rows(cfg, hw, seq_len, [em], calibration)[0]
 
 
 def run_sweep(models: Optional[Sequence[str]] = None,
@@ -360,6 +435,7 @@ def run_sweep(models: Optional[Sequence[str]] = None,
               points: Optional[int] = None,
               seq_lens: Sequence[int] = (0,),
               energy_model: Optional[EnergyModel] = None,
+              energy_models: Optional[Sequence[EnergyModel]] = None,
               include_presets: bool = True,
               knee_tolerance: float = 0.10,
               calibrations: Sequence[object] = (None,),
@@ -373,9 +449,17 @@ def run_sweep(models: Optional[Sequence[str]] = None,
     entry — None for the uncalibrated analytic model, or a
     ``repro.sim.replay.CalibrationReport`` / raw resource->factor
     mapping — sweeps the whole grid once, labeled on the rows; frontier
-    and knee extraction never mix calibrations."""
+    and knee extraction never mix calibrations.
+
+    ``energy_models`` is the cost-table axis (ROADMAP: ENERGY_CONFIGS x
+    HW grid): each ``EnergyModel`` re-folds every simulated point's trace
+    (the simulation itself runs once per point — latency is
+    cost-table-invariant), yielding per-table frontiers and the
+    ``SweepResult.frontier_sensitivity()`` report.  The scalar
+    ``energy_model`` remains the single-table entry point."""
     from repro.configs import registry
-    em = energy_model or STREAMDCIM_ENERGY_BASE
+    ems = (list(energy_models) if energy_models
+           else [energy_model or STREAMDCIM_ENERGY_BASE])
     model_names = list(models) if models else list(registry.SIM_ARCHS)
     presets = tuple(registry.HW_CONFIGS.values()) if include_presets else ()
     hw_points, skipped = grid_points(base, axes, presets)
@@ -387,10 +471,12 @@ def run_sweep(models: Optional[Sequence[str]] = None,
         for seq in seq_lens:
             for cal in calibrations:
                 for hw in hw_points:
-                    row = simulate_point(cfg, hw, seq_len=seq,
-                                         energy_model=em, calibration=cal)
-                    rows.append(row)
+                    pt_rows = _point_rows(cfg, hw, seq, ems,
+                                          calibration=cal)
+                    rows.extend(pt_rows)
                     if progress is not None:
-                        progress(row)
-    return SweepResult(rows=rows, skipped=skipped, energy_model=em.name,
+                        # one call per *simulated point* — the energy
+                        # axis re-folds the same trace, no extra work
+                        progress(pt_rows[0])
+    return SweepResult(rows=rows, skipped=skipped, energy_model=ems[0].name,
                        knee_tolerance=knee_tolerance)

@@ -219,6 +219,7 @@ def attention_by_plan(layer_plan, q: jax.Array, x_kv: jax.Array,
                       k_gamma: Optional[jax.Array] = None,
                       causal: bool = False, window: int = 0,
                       q_offset: int = 0, norm_eps: float = 1e-6,
+                      kv: Optional[Tuple[jax.Array, jax.Array]] = None,
                       use_pallas: bool = False) -> jax.Array:
     """Execute one attention layer according to a planner-resolved
     ``repro.plan.LayerPlan``: its ``mode`` picks the dispatch (NON_STREAM /
@@ -226,6 +227,12 @@ def attention_by_plan(layer_plan, q: jax.Array, x_kv: jax.Array,
     its ``block_q``/``block_kv`` set the kernel tiling.  Array shapes may
     be reduced vs the plan's full geometry (CPU-hosted numerics at small
     dims); the dataflow decision is shape-independent.
+
+    ``kv`` — the already-materialized (K, V) pair, when the caller holds
+    one (prefill fills the cache with it anyway): the NON/LAYER branches
+    consume it instead of re-projecting from ``x_kv``; the TILE_STREAM
+    branch ignores it (re-generating K/V inside the fused kernel IS the
+    cross-forwarding dataflow).
 
     Inside a ``repro.sim.replay.recording()`` block (and outside ``jit``)
     the call additionally emits one op-level ``KernelTrace`` — grid,
@@ -235,7 +242,7 @@ def attention_by_plan(layer_plan, q: jax.Array, x_kv: jax.Array,
         _attention_dispatch,
         layer_plan.mode, q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
         causal=causal, window=window, q_offset=q_offset, norm_eps=norm_eps,
-        use_pallas=use_pallas, block_q=layer_plan.block_q,
+        kv=kv, use_pallas=use_pallas, block_q=layer_plan.block_q,
         block_k=layer_plan.block_kv)
     rec = _replay_recorder(q, x_kv, wk, wv)
     if rec is None:
@@ -259,6 +266,46 @@ def attention_by_plan(layer_plan, q: jax.Array, x_kv: jax.Array,
         mode=layer_plan.mode.value,
         grid=(B, -(-Sq // bq), -(-Skv // bk)),
         block_q=bq, block_kv=bk, hbm_bytes=nbytes, flops=flops)
+
+
+def decode_attention_by_plan(decode_layer_plan, q: jax.Array, k: jax.Array,
+                             v: jax.Array, *,
+                             window: int = 0, q_offset: int = 0,
+                             use_pallas: bool = False) -> jax.Array:
+    """Execute one decode-step attention according to a planner-resolved
+    ``repro.plan.DecodeLayerPlan``: single-query GQA attention over the
+    cached K/V — q (B, Hq, 1, hd), k/v (B, Hkv, S, hd) where S is the
+    slot's attended KV length (the plan's post-pruning ``seq_kv``).  The
+    plan's ``block_kv`` sets the kv tiling; the mode decision is already
+    baked into the plan (all three modes are numerically identical for a
+    1-row query — the dataflow difference is a traffic/latency decision
+    the simulator models).
+
+    Inside a ``repro.sim.replay.recording()`` block (and outside ``jit``)
+    the call emits one op-level ``KernelTrace`` of kind ``"decode"`` —
+    ready to ``DecodePlan.attach_traces``, exactly as ``attention_by_plan``
+    records prefill ops (DESIGN.md §11)."""
+    call = functools.partial(
+        multi_head_attention, q, k, v, causal=False, window=window,
+        q_offset=q_offset, use_pallas=use_pallas,
+        block_q=8, block_k=decode_layer_plan.block_kv)
+    rec = _replay_recorder(q, k, v)
+    if rec is None:
+        return call()
+    from repro.plan.heuristics import decode_attn_hbm_bytes
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    bk = _pick_block(Skv, decode_layer_plan.block_kv)
+    nbytes = B * decode_attn_hbm_bytes(
+        Skv, Hq, Hkv, hd, decode_layer_plan.mode,
+        append=not decode_layer_plan.cross,
+        bytes_per_el=q.dtype.itemsize)
+    flops = B * 4 * Hq * Sq * Skv * hd          # QK^T + PV, cached K/V
+    return rec.measure(
+        call, op=decode_layer_plan.name, kind="decode",
+        mode=decode_layer_plan.mode.value,
+        grid=(B, 1, -(-Skv // bk)),
+        block_q=Sq, block_kv=bk, hbm_bytes=nbytes, flops=flops)
 
 
 def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
@@ -289,7 +336,9 @@ def _attention_dispatch(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
                         k_gamma: Optional[jax.Array], causal: bool,
                         window: int, q_offset: int, norm_eps: float,
                         use_pallas: bool, block_q: int = 256,
-                        block_k: int = 256) -> jax.Array:
+                        block_k: int = 256,
+                        kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                        ) -> jax.Array:
     if mode == ExecutionMode.TILE_STREAM:
         return streaming_attention(
             q, x_kv, wk, wv, sin=sin, cos=cos, k_gamma=k_gamma,
@@ -297,13 +346,16 @@ def _attention_dispatch(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
             norm_eps=norm_eps, use_pallas=use_pallas,
             block_q=block_q, block_k=block_k)
 
-    # Materialize K, V (the "CIM rewriting" both baselines pay).
-    k = jnp.einsum("bsd,dhe->bhse", x_kv, wk.astype(x_kv.dtype))
-    v = jnp.einsum("bsd,dhe->bhse", x_kv, wv.astype(x_kv.dtype))
-    if k_gamma is not None:
-        k = ref.rms_norm(k, k_gamma, eps=norm_eps)
-    if sin is not None:
-        k = ref.apply_rope(k, sin, cos)
+    if kv is not None:
+        k, v = kv           # caller already materialized (normed + roped)
+    else:
+        # Materialize K, V (the "CIM rewriting" both baselines pay).
+        k = jnp.einsum("bsd,dhe->bhse", x_kv, wk.astype(x_kv.dtype))
+        v = jnp.einsum("bsd,dhe->bhse", x_kv, wv.astype(x_kv.dtype))
+        if k_gamma is not None:
+            k = ref.rms_norm(k, k_gamma, eps=norm_eps)
+        if sin is not None:
+            k = ref.apply_rope(k, sin, cos)
 
     if mode == ExecutionMode.NON_STREAM:
         # Force every intermediate to materialize: no cross-op fusion.

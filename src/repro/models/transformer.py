@@ -350,11 +350,16 @@ def _project_kv(p_attn: Params, cfg: ModelConfig, h: jax.Array, sin, cos):
 
 
 def _prefill_layer(p: Params, cfg: ModelConfig, x: jax.Array, cache_l: Params,
-                   *, sin, cos, use_pallas: bool) -> Tuple[jax.Array, Params]:
+                   *, sin, cos, use_pallas: bool,
+                   lp=None) -> Tuple[jax.Array, Params]:
     """One layer of single-pass prefill: compute the layer output AND fill
-    the cache.  K/V materialize here by necessity (they ARE the cache);
-    attention runs flash-style over them (LAYER_STREAM semantics).  MLA
-    keeps the latent-only cache — tile-streaming decompression at decode."""
+    the cache.  K/V materialize into the cache by necessity (they ARE the
+    cache); the attention *compute* dispatches through the planner's
+    per-layer decision when ``lp`` (an ``repro.plan.LayerPlan``) is given —
+    ``kernels.ops.attention_by_plan`` with the layer's resolved mode and
+    block tiling — and falls back to the flash path (LAYER_STREAM
+    semantics) otherwise.  MLA keeps the latent-only cache —
+    tile-streaming decompression at decode."""
     from repro.kernels import ops as _ops
     h = L.rms_norm(p["norm1"], x, eps=cfg.norm_eps)
     new_c = dict(cache_l)
@@ -386,9 +391,20 @@ def _prefill_layer(p: Params, cfg: ModelConfig, x: jax.Array, cache_l: Params,
         if sin is not None:
             q = L.apply_rope_bsd(q, sin, cos)
         k, v = _project_kv(p["attn"], cfg, h, sin, cos)
-        attn_out = _ops.multi_head_attention(q, k, v, causal=True,
-                                             window=window,
-                                             use_pallas=use_pallas)
+        if lp is not None:
+            # Planner-resolved per-layer dispatch (DESIGN.md §11): the
+            # plan's mode picks the execution system (numerically
+            # equivalent across modes), its blocks set the kernel tiling.
+            attn_out = _ops.attention_by_plan(
+                lp, q, h, p["attn"]["wk"], p["attn"]["wv"],
+                sin=sin, cos=cos, k_gamma=p["attn"].get("k_gamma"),
+                causal=True, window=window, norm_eps=cfg.norm_eps,
+                kv=(k, v),      # cache fill already materialized them
+                use_pallas=use_pallas)
+        else:
+            attn_out = _ops.multi_head_attention(q, k, v, causal=True,
+                                                 window=window,
+                                                 use_pallas=use_pallas)
         attn_out = jnp.einsum("bhse,hed->bsd", attn_out,
                               p["attn"]["wo"].astype(h.dtype))
         kv_slot = cache_l["attn"] if cfg.family == Family.HYBRID else cache_l
@@ -425,11 +441,62 @@ def _prefill_layer(p: Params, cfg: ModelConfig, x: jax.Array, cache_l: Params,
     return x, new_c
 
 
+def _dispatch_segments(cfg: ModelConfig, plan, lo: int, hi: int,
+                       per_layer: bool = False):
+    """Maximal runs ``[a, b)`` of model layers in the stack range
+    ``[lo, hi)`` sharing one planner dispatch decision (mode + block
+    tiling), each paired with a representative ``LayerPlan``.  A uniform
+    (or absent) plan yields one segment — the whole stack scans in one
+    ``lax.scan`` exactly as before; a heterogeneous plan splits the scan
+    at mode boundaries so no layer collapses to another layer's mode.
+    Plan-less layers (SSM/hybrid mixers with no attention op) carry no
+    dispatch decision and merge into the surrounding segment.
+
+    ``per_layer=True`` forces one segment per layer — used while a
+    ``repro.sim.replay`` recording is active, so each layer's
+    ``KernelTrace`` is emitted under *its own* op name instead of the
+    segment representative's."""
+    if plan is None:
+        return [(lo, hi, None)]
+    reps = []
+    for i in range(lo, hi):
+        lps = [lp for lp in plan.layers if lp.layer_index == i]
+        reps.append(lps[0] if lps else None)
+    if per_layer:
+        return [(lo + i, lo + i + 1, reps[i]) for i in range(hi - lo)]
+    def key(lp):
+        return (lp.mode, lp.block_q, lp.block_kv)
+    segs = []
+    start = 0
+    seg_rep = None                  # first attention rep in the segment
+    for i in range(hi - lo):
+        r = reps[i]
+        if r is None:
+            continue                # no dispatch decision: stay mergeable
+        if seg_rep is None:
+            seg_rep = r
+        elif key(r) != key(seg_rep):
+            segs.append((lo + start, lo + i, seg_rep))
+            start, seg_rep = i, r
+    segs.append((lo + start, hi, seg_rep))
+    return segs
+
+
 def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             max_len: int, *, mode: Optional[ExecutionMode] = None,
+            plan=None,
             use_pallas: bool = False) -> Tuple[jax.Array, Params]:
-    """Single-pass prompt processing: fills the cache and returns full-prompt
-    logits (B, S, V)."""
+    """Single-pass prompt processing: fills the cache and returns
+    full-prompt logits (B, S, V).
+
+    ``plan`` — an ``repro.plan.ExecutionPlan`` for this model: each
+    layer's attention dispatches under *its own* resolved mode and block
+    tiling (``kernels.ops.attention_by_plan``); heterogeneous plans split
+    the layer scan into maximal same-mode segments instead of collapsing
+    to the first layer's mode (DESIGN.md §11).  ``mode`` is the legacy
+    knob (the cache-fill path is mode-invariant; kept for API
+    compatibility)."""
+    del mode                                # legacy knob, see docstring
     tokens = batch["tokens"]
     B, S = tokens.shape
     cache = init_cache(cfg, B, max_len)
@@ -440,23 +507,36 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
               else cfg.head_dim)
         sin, cos = L.rope_tables_for(cfg, S, head_dim=hd)
 
-    def scan_fill(x, stack, cache_slice):
+    def scan_fill(x, stack, cache_slice, lp=None):
         def stp(carry, inp):
-            lp, lc = inp
-            return _prefill_layer(lp, cfg, carry, lc, sin=sin, cos=cos,
-                                  use_pallas=use_pallas)
+            lpar, lc = inp
+            return _prefill_layer(lpar, cfg, carry, lc, sin=sin, cos=cos,
+                                  use_pallas=use_pallas, lp=lp)
         return maybe_scan(stp, x, (stack, cache_slice))
 
     if cfg.family == Family.MOE and cfg.first_dense_layers:
         nd = cfg.first_dense_layers
-        head_c = jax.tree.map(lambda a: a[:nd], cache["layers"])
-        tail_c = jax.tree.map(lambda a: a[nd:], cache["layers"])
-        x, new_head = scan_fill(x, params["dense_layers"], head_c)
-        x, new_tail = scan_fill(x, params["layers"], tail_c)
-        new_layers = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
-                                  new_head, new_tail)
+        stacks = [("dense_layers", 0, nd), ("layers", nd, cfg.num_layers)]
     else:
-        x, new_layers = scan_fill(x, params["layers"], cache["layers"])
+        stacks = [("layers", 0, cfg.num_layers)]
+    # Under an active kernel recording, split per layer so each layer's
+    # KernelTrace carries its own op name (recording implies the
+    # unrolled path — inside lax.scan the recorder sees tracers and
+    # stays silent anyway).
+    import sys
+    replay = sys.modules.get("repro.sim.replay")
+    rec_active = (replay is not None
+                  and replay.active_recorder() is not None)
+    parts = []
+    for pname, lo, hi in stacks:
+        for a, b, lp in _dispatch_segments(cfg, plan, lo, hi,
+                                           per_layer=rec_active):
+            seg_p = jax.tree.map(lambda t: t[a - lo:b - lo], params[pname])
+            seg_c = jax.tree.map(lambda t: t[a:b], cache["layers"])
+            x, new_c = scan_fill(x, seg_p, seg_c, lp)
+            parts.append(new_c)
+    new_layers = parts[0] if len(parts) == 1 else jax.tree.map(
+        lambda *ls: jnp.concatenate(ls, 0), *parts)
 
     x = L.rms_norm(params["final_norm"], x, eps=cfg.norm_eps)
     logits = L.unembed(params["embed"], x, cfg)

@@ -24,19 +24,30 @@ from repro.plan.heuristics import (DEFAULT_BLOCK, attn_hbm_bytes,
                                    resolve_layer_mode,
                                    tile_stream_profitable)
 
+from repro.plan.heuristics import (decode_attn_hbm_bytes,  # noqa: F401
+                                   decode_rewrite_cycles)
+
 __all__ = [
-    "DEFAULT_BLOCK", "attn_hbm_bytes", "resolve_layer_mode",
+    "DEFAULT_BLOCK", "attn_hbm_bytes", "decode_attn_hbm_bytes",
+    "decode_rewrite_cycles", "resolve_layer_mode",
     "tile_stream_profitable",
     "ExecutionPlan", "LayerPlan", "GemmPlan", "PLAN_VERSION",
     "plan_model", "plan_attention", "resolve_hw",
+    "DecodePlan", "DecodeLayerPlan", "DECODE_PLAN_VERSION",
+    "plan_decode_step",
 ]
 
 _PLANNER_NAMES = {"ExecutionPlan", "LayerPlan", "GemmPlan", "PLAN_VERSION",
                   "plan_model", "plan_attention", "resolve_hw"}
+_DECODE_NAMES = {"DecodePlan", "DecodeLayerPlan", "DECODE_PLAN_VERSION",
+                 "plan_decode_step"}
 
 
 def __getattr__(name):
     if name in _PLANNER_NAMES:
         from repro.plan import planner
         return getattr(planner, name)
+    if name in _DECODE_NAMES:
+        from repro.plan import decode
+        return getattr(decode, name)
     raise AttributeError(f"module 'repro.plan' has no attribute {name!r}")

@@ -64,6 +64,67 @@ def resolve_layer_mode(requested: ExecutionMode, *, d_kv: int,
     return ExecutionMode.LAYER_STREAM
 
 
+def decode_attn_hbm_bytes(seq_kv: int, num_heads: int, num_kv_heads: int,
+                          head_dim: int, mode: ExecutionMode, *,
+                          append: bool = True,
+                          bytes_per_el: int = 2) -> int:
+    """Analytic HBM-traffic model for one *decode-step* attention layer,
+    one slot (DESIGN.md §11).
+
+    ``seq_kv`` is the KV length the step actually attends over — the
+    cache length *including* the token being decoded, after DTPU pruning
+    (``PruningConfig.kept_tokens``) shrank it for this layer.  ``append``
+    is False for static caches (enc-dec cross-attention: the encoder KV
+    never grows).  Mirrored exactly by the simulator's decode lowering
+    (``sim.pipeline``):
+
+    * TILE_STREAM  — the new token's K/V are generated on the stationary
+      macros and cross-forwarded straight into the attention macros (never
+      read back from HBM this step); one cache-append write + a streamed
+      read of the ``seq_kv - 1`` previously cached tokens.
+    * LAYER_STREAM — layer-granular sync: the append commits to HBM first,
+      then attention re-reads the *whole* cache including the new token.
+    * NON_STREAM   — unfused: Q and the score/probability rows spill and
+      round-trip HBM around every stage, exactly like the prefill model.
+    """
+    kv_w = 2 * num_kv_heads * head_dim * bytes_per_el
+    qo = num_heads * head_dim * bytes_per_el       # one token's Q (== O)
+    if mode == ExecutionMode.NON_STREAM:
+        a = num_heads * seq_kv * bytes_per_el      # one score row per head
+        return ((kv_w if append else 0) + seq_kv * kv_w
+                + 2 * qo + 4 * a + 2 * qo)
+    if mode == ExecutionMode.LAYER_STREAM:
+        return (kv_w if append else 0) + seq_kv * kv_w
+    # TILE_STREAM: forwarded new-token KV is not re-read — with append the
+    # step moves (seq_kv - 1) cached rows in + 1 appended row out, without
+    # it just the seq_kv cached rows; both total seq_kv rows.
+    return seq_kv * kv_w
+
+
+def decode_rewrite_cycles(seq_kv: int, num_kv_heads: int, head_dim: int,
+                          mode: ExecutionMode, *,
+                          block_kv: int = DEFAULT_BLOCK,
+                          rewrite_bytes_per_cycle: int,
+                          bytes_per_el: int = 2) -> int:
+    """CIM write-port cycles to land one decode step's KV working set in
+    the attention macros — the same per-tile arithmetic the simulator's
+    decode lowering charges.  Streaming modes rewrite the cached KV tile
+    by tile (the last tile may be partial — decode lengths are ragged);
+    NON_STREAM rewrites K and V whole.  This is where DTPU pruning pays
+    off in decode: fewer kept tokens, fewer tiles rewritten."""
+    kv_row = 2 * num_kv_heads * head_dim * bytes_per_el
+    if mode == ExecutionMode.NON_STREAM:
+        half = seq_kv * num_kv_heads * head_dim * bytes_per_el
+        return 2 * -(-half // rewrite_bytes_per_cycle)
+    cycles = 0
+    done = 0
+    while done < seq_kv:
+        tile = min(block_kv, seq_kv - done)
+        cycles += -(-(tile * kv_row) // rewrite_bytes_per_cycle)
+        done += tile
+    return cycles
+
+
 def attn_hbm_bytes(seq_q: int, seq_kv: int, d_kv: int, num_heads: int,
                    num_kv_heads: int, head_dim: int, mode: ExecutionMode, *,
                    block_q: int = DEFAULT_BLOCK,

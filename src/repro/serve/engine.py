@@ -1,26 +1,35 @@
-"""Batched serving engine: request queue -> slot-based continuous batching.
+"""Slot-level continuous-batching serving engine (DESIGN.md §11).
 
-The engine owns a fixed decode batch of ``slots``; requests are admitted
-into free slots (prompt prefilled into that slot's cache region), every
-``decode_step`` advances all active slots by one token, finished slots are
-recycled.  Prefill runs the planner-resolved execution mode (TILE_STREAM
-cross-forwarding where profitable); decode is the cached path.
+The engine owns ``slots`` independent decode slots, each holding its own
+KV cache (batch dim 1) and position; every engine step it (1) admits
+arrived requests into free slots — *while other slots are mid-decode*,
+no wave draining — running each admission's prefill under its
+planner-resolved ``ExecutionPlan`` (per-layer modes dispatched through
+``kernels.ops.attention_by_plan``, heterogeneous plans included), then
+(2) advances every already-active slot by one token, and (3) recycles a
+slot the moment its request's token budget is spent — a short request
+never pads out to a long neighbour's length.
 
-Mode resolution (PR 2): the engine consumes an ``repro.plan.ExecutionPlan``
-— pass ``plan=`` to pin one, or let the engine call ``plan_model`` per
-admitted wave's padded prompt length, so the StreamDCIM reconfiguration
-decision tracks each batch's actual shape instead of being frozen at
-construction (DESIGN.md §8).  The legacy ``mode=`` kwarg remains as a
-deprecation shim that bypasses the planner.
+The step timeline is the *shared* deterministic schedule
+(``repro.serve.schedule.build_schedule``), the same object
+``repro.sim.simulate_serve`` lowers through the cycle-approximate
+simulator — so the simulator reproduces this engine's per-request decode
+step counts exactly, and each decode step's ``DecodePlan``
+(``repro.plan.plan_decode_step``) carries the predicted HBM bytes the
+simulator cross-asserts.
 
-Single-host reference implementation (examples/serve_batch.py); the sharded
-variant jits prefill/decode with the same shardings as launch/dryrun.py
-decode cells.
+Plans are compiled on admission from a bounded LRU cache
+(``plan_cache_size``); the queue is a ``collections.deque`` — long-running
+servers neither re-scan the queue per admission nor grow the plan cache
+without limit.  The legacy ``mode=`` kwarg remains as a deprecation shim
+that bypasses the planner.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import inspect
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +37,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.core.types import ExecutionMode, ModelConfig
+from repro.serve.schedule import Schedule, ServeRequest, build_schedule
 
 
 @dataclasses.dataclass
@@ -35,54 +45,141 @@ class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 16
+    arrival_step: int = 0         # engine step the request becomes visible
     out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    """What one engine step actually executed (the engine-side half of
+    the engine==simulator agreement tests)."""
+
+    step: int
+    admitted: Tuple[int, ...]            # rids prefilled
+    decoded: Tuple[int, ...]             # rids advanced one token
+    kv_lens: Tuple[int, ...]             # per decoded slot: attended KV len
+    decode_plan: Optional[object] = None  # the step's DecodePlan (or None)
+
+
+class _LRU:
+    """Tiny bounded LRU mapping (OrderedDict-backed)."""
+
+    def __init__(self, maxsize: int) -> None:
+        self.maxsize = max(int(maxsize), 1)
+        self._d: "OrderedDict[Any, Any]" = OrderedDict()
+
+    def get(self, key):
+        if key not in self._d:
+            return None
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512,
                  plan=None,
+                 plan_cache_size: int = 32,
+                 plan_decode: bool = True,
                  mode: Optional[ExecutionMode] = None):
-        """``plan``: an ``repro.plan.ExecutionPlan`` to serve under (its
-        resolved mode is used for every wave); default: re-plan per wave
-        shape.  ``mode``: deprecated explicit override (pre-PR-2 API) —
-        skips the planner entirely."""
+        """``plan``: an ``repro.plan.ExecutionPlan`` to serve under (pins
+        every admission); default: re-plan per admitted prompt length from
+        a bounded LRU cache.  Prefill plans and per-step ``DecodePlan``s
+        each get their own LRU of ``plan_cache_size`` entries (up to 2x
+        ``plan_cache_size`` plans total).  ``plan_decode=False`` skips
+        per-step
+        ``DecodePlan`` compilation (pure-throughput serving; step records
+        then carry no plan).  ``mode``: deprecated explicit override
+        (pre-PR-2 API) — skips the planner entirely."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.plan = plan
+        self.plan_decode = plan_decode
         self._forced_mode = mode
-        self._plan_cache: Dict[int, Any] = {}
+        self._plan_cache = _LRU(plan_cache_size)
+        # Decode plans get their own bound: their keys (kv-length tuples)
+        # change almost every step, and sharing one LRU would let that
+        # churn evict the highly-reusable per-prompt-length prefill plans.
+        self._decode_plan_cache = _LRU(plan_cache_size)
         self.mod = registry.model_module(cfg)
+        self._prefill_takes_plan = (
+            hasattr(self.mod, "prefill")
+            and "plan" in inspect.signature(self.mod.prefill).parameters)
         self._decode = jax.jit(
             lambda p, c, t: self.mod.decode_step(p, cfg, c, t))
-        self._queue: List[Request] = []
-        self._active: Dict[int, Request] = {}
-        self._remaining: Dict[int, int] = {}
+        self._queue: deque = deque()
+        self.step_log: List[StepRecord] = []
+        self.decode_calls = 0         # actual decode_step invocations
+        self.last_schedule: Optional[Schedule] = None
 
     def submit(self, req: Request) -> None:
+        # The cache peaks at prompt + max_new - 1 entries (the last
+        # emitted token is never written back).
+        if len(req.prompt) + req.max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) - 1 exceeds the "
+                f"engine's max_len ({self.max_len})")
         req.out_tokens = []
         self._queue.append(req)
 
+    # ------------------------------------------------------------------
+    # Planning
+    # ------------------------------------------------------------------
+
     def plan_for(self, seq_len: int):
-        """The ``ExecutionPlan`` governing a wave of padded prompt length
-        ``seq_len`` (cached per length).  A construction-time ``plan=``
-        wins; attention-free families have nothing to plan (None)."""
+        """The ``ExecutionPlan`` governing an admission of prompt length
+        ``seq_len`` (bounded-LRU cached per length).  A construction-time
+        ``plan=`` wins; attention-free families have nothing to plan
+        (None)."""
         if self.plan is not None:
             return self.plan
         if self.cfg.num_heads == 0:
             return None
-        if seq_len not in self._plan_cache:
+        plan = self._plan_cache.get(seq_len)
+        if plan is None:
             from repro.plan import plan_model
-            self._plan_cache[seq_len] = plan_model(self.cfg,
-                                                   seq_len=seq_len)
-        return self._plan_cache[seq_len]
+            plan = plan_model(self.cfg, seq_len=seq_len)
+            self._plan_cache.put(seq_len, plan)
+        return plan
+
+    def decode_plan_for(self, kv_lens: Tuple[int, ...]):
+        """The ``DecodePlan`` for one step whose active slots attend
+        ``kv_lens`` (bounded-LRU cached per length tuple)."""
+        if not self.plan_decode or self.cfg.num_heads == 0:
+            return None
+        key = tuple(kv_lens)
+        dp = self._decode_plan_cache.get(key)
+        if dp is None:
+            from repro.plan import plan_decode_step
+            # The deprecated mode= override bypasses the planner for
+            # prefill; decode plans must honor it too, or step records
+            # would contradict the mode the engine claims to serve under.
+            dp = plan_decode_step(self.cfg, key, mode=self._forced_mode,
+                                  force_mode=self._forced_mode is not None)
+            self._decode_plan_cache.put(key, dp)
+        return dp
 
     def mode_for(self, seq_len: int) -> ExecutionMode:
-        """Planner-resolved prefill mode for one wave (decoder plans are
-        uniform across layers; heterogeneous plans use the first layer's
-        mode until per-layer prefill dispatch lands — ROADMAP)."""
+        """Planner-resolved prefill mode summary for one admission.
+        Heterogeneous plans no longer collapse to this — prefill
+        dispatches per layer (``prefill(plan=...)``); this accessor
+        reports the uniform mode (or the first layer's, for
+        heterogeneous plans) for logging and legacy callers."""
         if self._forced_mode is not None:       # deprecated explicit override
             return self._forced_mode
         plan = self.plan_for(seq_len)
@@ -90,42 +187,115 @@ class Engine:
             return self.cfg.execution_mode
         return plan.uniform_mode or plan.layers[0].mode
 
-    def _prefill_batch(self, reqs: List[Request]):
-        """Pad prompts to a common length, prefill, return caches+logits."""
-        S = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((len(reqs), S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt      # left-pad
+    # ------------------------------------------------------------------
+    # Execution
+    # ------------------------------------------------------------------
+
+    def _prefill_one(self, req: Request):
+        """Prefill one request into a fresh slot cache (B=1, unpadded —
+        per-request numerics never depend on the neighbours)."""
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        plan = self.plan_for(len(req.prompt))
+        kwargs: Dict[str, Any] = {}
+        if self._forced_mode is not None:
+            kwargs["mode"] = self._forced_mode
+        elif plan is not None and self._prefill_takes_plan:
+            kwargs["plan"] = plan
+        else:
+            kwargs["mode"] = self.mode_for(len(req.prompt))
         logits, cache = self.mod.prefill(
-            self.params, self.cfg, {"tokens": jnp.asarray(toks)},
-            max_len=self.max_len, mode=self.mode_for(S))
+            self.params, self.cfg, {"tokens": toks},
+            max_len=self.max_len, **kwargs)
         return logits[:, -1], cache
 
     def run(self, *, greedy: bool = True) -> List[Request]:
-        """Drain the queue; returns completed requests.
+        """Drain the queue under the continuous-batching schedule;
+        returns completed requests in completion order.
 
-        Simplification vs vLLM-grade engines: admission happens in waves of
-        up to ``slots`` requests (cache slot re-packing between waves is a
-        gather over the batch dim).
+        Every step admits into any free slot (other slots keep decoding),
+        decodes each active slot once, and recycles finished slots
+        immediately — a request with ``n`` output tokens consumes exactly
+        ``n - 1`` decode steps regardless of its neighbours.
         """
+        del greedy                              # argmax sampling only
+        reqs = list(self._queue)
+        self._queue.clear()
+        schedule = build_schedule(
+            [ServeRequest(r.rid, len(r.prompt), r.max_new_tokens,
+                          r.arrival_step) for r in reqs],
+            self.slots)
+        self.last_schedule = schedule
+        by_rid = {r.rid: r for r in reqs}
+        slot_state: Dict[int, Dict[str, Any]] = {}
+        rid_slot: Dict[int, int] = {}
         done: List[Request] = []
-        while self._queue:
-            wave = [self._queue.pop(0)
-                    for _ in range(min(self.slots, len(self._queue)))]
-            last_logits, cache = self._prefill_batch(wave)
-            next_tok = jnp.argmax(
-                last_logits[:, :self.cfg.vocab_size], axis=-1)[:, None]
-            remaining = np.array([r.max_new_tokens for r in wave])
-            for i, r in enumerate(wave):
-                r.out_tokens.append(int(next_tok[i, 0]))
-            steps = int(remaining.max()) - 1
-            for _ in range(max(steps, 0)):
-                logits, cache = self._decode(self.params, cache, next_tok)
-                next_tok = jnp.argmax(
-                    logits[:, 0, :self.cfg.vocab_size], axis=-1)[:, None]
-                remaining -= 1
-                for i, r in enumerate(wave):
-                    if remaining[i] > 0:
-                        r.out_tokens.append(int(next_tok[i, 0]))
-            done.extend(wave)
+        self.step_log = []
+        self.decode_calls = 0
+        V = self.cfg.vocab_size
+        for st in schedule.steps:
+            for slot, rid in st.admitted:
+                r = by_rid[rid]
+                last_logits, cache = self._prefill_one(r)
+                tok = jnp.argmax(last_logits[:, :V], axis=-1)[:, None]
+                r.out_tokens.append(int(tok[0, 0]))
+                slot_state[slot] = {"req": r, "cache": cache, "tok": tok}
+                rid_slot[rid] = slot
+            dp = None
+            if st.decoding:
+                dp = self.decode_plan_for(
+                    tuple(kv for _, _, kv in st.decoding))
+                for slot, rid, _kv in st.decoding:
+                    ss = slot_state[slot]
+                    logits, ss["cache"] = self._decode(
+                        self.params, ss["cache"], ss["tok"])
+                    self.decode_calls += 1
+                    tok = jnp.argmax(logits[:, 0, :V], axis=-1)[:, None]
+                    ss["tok"] = tok
+                    ss["req"].out_tokens.append(int(tok[0, 0]))
+            self.step_log.append(StepRecord(
+                step=st.step,
+                admitted=tuple(r for _, r in st.admitted),
+                decoded=tuple(r for _, r, _ in st.decoding),
+                kv_lens=tuple(kv for _, _, kv in st.decoding),
+                decode_plan=dp))
+            for rid in st.finished:
+                done.append(by_rid[rid])
+                del slot_state[rid_slot.pop(rid)]       # recycle the slot
         return done
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def plan_cache_len(self) -> int:
+        return len(self._plan_cache)
+
+    def stats(self) -> Dict[str, object]:
+        """Summary of the last ``run``: step count, per-request decode
+        steps, admission/finish steps — directly comparable with
+        ``repro.sim.simulate_serve``'s ``ServeSimResult``.
+
+        Step and decode counts are derived from ``step_log`` — what the
+        engine *executed* — not from the schedule it planned to execute,
+        so an execution bug cannot hide behind a correct schedule (the
+        simulator lowers the same schedule; comparing executed-vs-sim is
+        the meaningful check)."""
+        s = self.last_schedule
+        if s is None:
+            return {"steps": 0, "decode_steps": {}, "decode_calls": 0}
+        decode_steps: Dict[int, int] = {rid: 0 for rid in s.decode_steps}
+        for rec in self.step_log:
+            for rid in rec.decoded:
+                decode_steps[rid] = decode_steps.get(rid, 0) + 1
+        return {
+            "steps": len(self.step_log),
+            "decode_steps": decode_steps,
+            "admit_step": dict(s.admit_step),
+            "finish_step": dict(s.finish_step),
+            "decode_calls": self.decode_calls,
+            "max_concurrency": max(
+                (len(r.admitted) + len(r.decoded) for r in self.step_log),
+                default=0),
+            "plan_cache_len": self.plan_cache_len,
+        }

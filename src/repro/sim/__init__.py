@@ -57,8 +57,12 @@ Design-space exploration over (HardwareConfig x EnergyModel x model)
 grids lives in ``repro.dse``, which drives ``plan_model -> simulate_plan``
 per point and reads ``SimResult.energy()`` here.
 
-Out of scope (ROADMAP §Simulator): decode-step workloads, DTPU pruning
-interaction.
+Serving timelines (DESIGN.md §11): ``simulate_serve`` lowers a
+multi-request continuous-batching schedule — per-prompt prefill
+``ExecutionPlan``s plus per-step ``DecodePlan``s
+(``repro.plan.plan_decode_step``, DTPU pruning shrinking seq_kv per
+layer) — through the same schedulers, cross-asserting per-step decode
+HBM bytes against the planner's prediction.
 """
 from repro.configs.hardware import (HW_PRESETS, HardwareConfig,
                                     STREAMDCIM_BASE, STREAMDCIM_SMALL,
@@ -74,9 +78,11 @@ from repro.sim.replay import (CalibrationReport, KernelRecorder,
                               KernelTrace, active_recorder,
                               analytic_op_profile, fit_calibration,
                               record_plan, recording)
+from repro.sim.serve_sim import ServeSimResult, ServeStepSim, simulate_serve
 from repro.sim.trace import Event, Trace
-from repro.sim.workload import (AttnOp, GemmOp, Layer, Workload,
-                                build_workload, workload_from_plan)
+from repro.sim.workload import (AttnOp, DecodeOp, GemmOp, Layer, Workload,
+                                build_workload, decode_workload_from_plan,
+                                workload_from_plan)
 
 __all__ = [
     "HW_PRESETS", "HardwareConfig", "STREAMDCIM_BASE", "STREAMDCIM_SMALL",
@@ -86,6 +92,7 @@ __all__ = [
     "simulate_plan", "simulate_rewrite_stall", "CalibrationReport",
     "KernelRecorder", "KernelTrace", "active_recorder",
     "analytic_op_profile", "fit_calibration", "record_plan", "recording",
-    "Event", "Trace", "AttnOp", "GemmOp", "Layer", "Workload",
-    "build_workload", "workload_from_plan",
+    "ServeSimResult", "ServeStepSim", "simulate_serve",
+    "Event", "Trace", "AttnOp", "DecodeOp", "GemmOp", "Layer", "Workload",
+    "build_workload", "decode_workload_from_plan", "workload_from_plan",
 ]

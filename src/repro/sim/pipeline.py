@@ -35,7 +35,7 @@ from repro.core.types import ExecutionMode, ModelConfig
 from repro.sim.dataflow import Engine, cross_forward_attention
 from repro.sim.macro import MacroArray, MacroMode, dma_cycles
 from repro.sim.trace import Trace
-from repro.sim.workload import (AttnOp, BLOCK, GemmOp, Workload,
+from repro.sim.workload import (AttnOp, BLOCK, DecodeOp, GemmOp, Workload,
                                 build_workload)
 
 
@@ -94,6 +94,92 @@ class _Scheduler:
     def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
         raise NotImplementedError
 
+    # ---- decode-step lowering (DESIGN.md §11) ----------------------------
+    # One DecodeOp advances every active slot by one token: the new
+    # token's Q (and, for growing caches, K/V) are generated on the
+    # stationary macros, the cached K/V stream in tile by tile and are
+    # rewritten into the attention macros, and a 1-row attention runs per
+    # tile.  Byte/rewrite accounting mirrors
+    # ``plan.heuristics.decode_attn_hbm_bytes`` / ``decode_rewrite_cycles``
+    # exactly — ``simulate_serve`` cross-asserts it per step.
+
+    def _decode_gen(self, eng: Engine, op: DecodeOp, start: int,
+                    tag: str) -> Tuple[int, int, List[int]]:
+        """Shared front half: Q generation, new-token KV generation and
+        the cache-append write.  Returns (qgen, kv_ready, byte_events)."""
+        hw, ab = self.hw, self.hw.act_bytes
+        n = op.slots
+        qgen = eng.task("compute", "GEN",
+                        self.gen.gemm_cycles(n, op.d_q,
+                                             op.heads * op.head_dim),
+                        [start], tag=f"{tag}:qgen")
+        if not op.append:
+            return qgen, start, []
+        kvgen = eng.task("compute", "GEN",
+                         2 * self.gen.gemm_cycles(
+                             n, op.d_kv, op.kv_heads * op.head_dim),
+                         [start], tag=f"{tag}:kvgen")
+        row = op.kv_width * ab
+        app = eng.task("dma", "HBM", dma_cycles(hw, n * row), [kvgen],
+                       nbytes=n * row, tag=f"{tag}:kvappend")
+        return qgen, kvgen, [app]
+
+    def _decode_tiles(self, seq_kv: int, block_kv: int) -> List[int]:
+        """Ragged tile split of one slot's attended KV (last tile short)."""
+        out, done = [], 0
+        while done < seq_kv:
+            tile = min(block_kv, seq_kv - done)
+            out.append(tile)
+            done += tile
+        return out
+
+    def _decode_streamed(self, eng: Engine, op: DecodeOp, start: int,
+                         rewrite_res: str) -> int:
+        """The streaming decode schedule shared by TILE_STREAM (rewrites
+        ride the shadow-array bus: ``rewrite_res="BUS"``) and LAYER_STREAM
+        (rewrites block the macro array: ``"ATTN"``).  TILE additionally
+        forwards the new token's K/V over the NoC instead of re-reading it
+        from HBM — one fewer cached row moved per slot."""
+        hw, ab = self.hw, self.hw.act_bytes
+        tag = op.name
+        qgen, kv_ready, byte_evs = self._decode_gen(eng, op, start, tag)
+        row = op.kv_width * ab
+        tile_overlap = rewrite_res == "BUS"
+        ends: List[int] = list(byte_evs)
+        for s, kept in enumerate(op.seq_kv):
+            # TILE: the forwarded new-token row never re-reads from HBM.
+            read_rows = kept - 1 if (op.append and tile_overlap) else kept
+            gate = eng.barrier([qgen, kv_ready] + byte_evs[-1:],
+                               tag=f"{tag}:s{s}:ready") \
+                if not tile_overlap else qgen
+            prev_comp: List[int] = []
+            read_left = read_rows
+            for j, tile in enumerate(self._decode_tiles(kept, op.block_kv)):
+                rd_rows = min(tile, read_left)
+                read_left -= rd_rows
+                deps = [gate]
+                if rd_rows > 0:
+                    deps = [eng.task("dma", "HBM",
+                                     dma_cycles(hw, rd_rows * row), [gate],
+                                     nbytes=rd_rows * row,
+                                     tag=f"{tag}:s{s}:kvdma:k{j}")]
+                elif tile_overlap:
+                    deps = [kv_ready]            # forwarded over the NoC
+                rw = eng.task("rewrite", rewrite_res,
+                              self.attn.rewrite_cycles(tile * row), deps,
+                              nbytes=tile * row, tag=f"{tag}:s{s}:rw:k{j}")
+                comp = eng.task("compute", "ATTN",
+                                2 * self.attn.gemm_cycles(
+                                    1, op.head_dim, tile, count=op.heads),
+                                [rw] + prev_comp[-1:],
+                                tag=f"{tag}:s{s}:qkpv:k{j}")
+                prev_comp.append(comp)
+            ends.append(prev_comp[-1])
+        return eng.barrier(ends, tag=f"{tag}:done")
+
+    def build_decode(self, eng: Engine, op: DecodeOp, start: int) -> int:
+        raise NotImplementedError
+
 
 class _TileStream(_Scheduler):
     mode = ExecutionMode.TILE_STREAM
@@ -107,6 +193,11 @@ class _TileStream(_Scheduler):
     def build_attn(self, eng: Engine, op: AttnOp, start: int) -> int:
         return cross_forward_attention(eng, self.hw, op, self.gen,
                                        self.attn, start, op.name)
+
+    def build_decode(self, eng: Engine, op: DecodeOp, start: int) -> int:
+        # Hybrid mode: rewrites ride the shadow sub-array bus and overlap
+        # attention compute; the new token's K/V cross-forward on-chip.
+        return self._decode_streamed(eng, op, start, "BUS")
 
 
 class _LayerStream(_Scheduler):
@@ -170,6 +261,11 @@ class _LayerStream(_Scheduler):
         odma = eng.task("dma", "HBM", dma_cycles(hw, o_bytes), ends,
                         nbytes=o_bytes, tag=f"{op.name}:odma")
         return eng.barrier([odma], tag=f"{op.name}:done")
+
+    def build_decode(self, eng: Engine, op: DecodeOp, start: int) -> int:
+        # Normal mode: layer-granular sync (append commits before the
+        # cache re-read) and rewrites block the macro array.
+        return self._decode_streamed(eng, op, start, "ATTN")
 
 
 class _NonStream(_Scheduler):
@@ -263,6 +359,58 @@ class _NonStream(_Scheduler):
                         q_bytes, f"{n}:odma:read")
         return eng.barrier([t], tag=f"{n}:done")
 
+    def build_decode(self, eng: Engine, op: DecodeOp, start: int) -> int:
+        # Unfused: per slot, Q and the score/probability rows round-trip
+        # HBM; whole K then whole V rewrite serially into the array.
+        hw, ab = self.hw, self.hw.act_bytes
+        n = op.name
+        qgen, kv_ready, byte_evs = self._decode_gen(eng, op, start, n)
+        q_bytes = op.heads * op.head_dim * ab
+        ends: List[int] = []
+        for s, kept in enumerate(op.seq_kv):
+            half = kept * op.kv_heads * op.head_dim * ab
+            a_bytes = op.heads * kept * ab
+            t = eng.barrier([qgen, kv_ready] + byte_evs, tag=f"{n}:s{s}:in")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                            q_bytes, f"{n}:s{s}:qdma:write")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                            q_bytes, f"{n}:s{s}:qdma:read")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, half),
+                            half, f"{n}:s{s}:kvdma:readk")
+            t = self._chain(eng, t, "rewrite", "ATTN",
+                            self.attn.rewrite_cycles(half), half,
+                            f"{n}:s{s}:rwk")
+            t = self._chain(eng, t, "compute", "ATTN",
+                            self.attn.gemm_cycles(1, op.head_dim, kept,
+                                                  count=op.heads),
+                            0, f"{n}:s{s}:qk")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                            a_bytes, f"{n}:s{s}:adma:write")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                            a_bytes, f"{n}:s{s}:adma:read")
+            t = self._chain(eng, t, "compute", "VEC",
+                            math.ceil(op.heads * kept / hw.macro_cols), 0,
+                            f"{n}:s{s}:softmax")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                            a_bytes, f"{n}:s{s}:adma:writep")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, a_bytes),
+                            a_bytes, f"{n}:s{s}:adma:readp")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, half),
+                            half, f"{n}:s{s}:kvdma:readv")
+            t = self._chain(eng, t, "rewrite", "ATTN",
+                            self.attn.rewrite_cycles(half), half,
+                            f"{n}:s{s}:rwv")
+            t = self._chain(eng, t, "compute", "ATTN",
+                            self.attn.gemm_cycles(1, kept, op.head_dim,
+                                                  count=op.heads),
+                            0, f"{n}:s{s}:pv")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                            q_bytes, f"{n}:s{s}:odma:write")
+            t = self._chain(eng, t, "dma", "HBM", dma_cycles(hw, q_bytes),
+                            q_bytes, f"{n}:s{s}:odma:read")
+            ends.append(t)
+        return eng.barrier(ends, tag=f"{n}:done")
+
 
 _SCHEDULERS = {
     ExecutionMode.TILE_STREAM: _TileStream,
@@ -334,6 +482,8 @@ def _simulate_ops(wl: Workload, hw: HardwareConfig, sched_for_op,
                 sched = sched_for_op(op)
                 if isinstance(op, AttnOp):
                     prev = sched.build_attn(eng, op, prev)
+                elif isinstance(op, DecodeOp):
+                    prev = sched.build_decode(eng, op, prev)
                 else:
                     prev = sched.build_gemm(eng, op, prev)
         prev = eng.barrier([prev], tag=f"layer{layer.index}")

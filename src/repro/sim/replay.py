@@ -54,8 +54,8 @@ DEFAULT_CLOCK_HZ = 1e9
 
 #: Op classes a ``KernelTrace`` can describe; the replay lowering charges
 #: the recorded cycles to the class's primary macro-array resource.
-TRACE_KINDS = ("attention", "gemm")
-_KIND_RESOURCE = {"attention": "ATTN", "gemm": "GEN"}
+TRACE_KINDS = ("attention", "gemm", "decode")
+_KIND_RESOURCE = {"attention": "ATTN", "gemm": "GEN", "decode": "ATTN"}
 
 
 # ---------------------------------------------------------------------------

@@ -9,10 +9,16 @@ The simulator sees a model as a sequence of layers, each a tuple of ops:
   projections); identical compute across schedulers, but the non-streaming
   baseline round-trips its activations through HBM.
 
+* ``DecodeOp`` — one attention layer of one decode *step* across active
+  serving slots (per-slot cached-KV lengths); built from
+  ``repro.plan.DecodePlan``s via ``decode_workload_from_plan`` and
+  consumed by ``sim.simulate_serve`` (DESIGN.md §11).
+
 Supported families (the paper's §III pool): CROSSMODAL (ViLBERT two-stream
-co-TRM), ENCDEC (whisper), and dense/VLM decoders (qwen2-vl).  Sequence
-lengths are padded to the attention block size; DTPU pruning and decode
-steps are out of simulator scope (see ROADMAP §Simulator).
+co-TRM), ENCDEC (whisper), and dense/VLM decoders (qwen2-vl).  Prefill
+sequence lengths are padded to the attention block size; decode KV
+lengths are ragged (the last tile may be partial) and shrink per layer
+under DTPU pruning.
 """
 from __future__ import annotations
 
@@ -53,6 +59,34 @@ class GemmOp:
 
 
 @dataclasses.dataclass(frozen=True)
+class DecodeOp:
+    """One attention layer of one decode *step* across active slots: each
+    slot streams its cached K/V (post-DTPU-pruning length ``seq_kv[s]``)
+    through the attention macros for a single query token.  ``append`` is
+    False for static caches (enc-dec cross-attention).  Built from a
+    ``repro.plan.DecodePlan`` layer (``decode_workload_from_plan``)."""
+
+    name: str
+    seq_kv: Tuple[int, ...]   # per-slot attended KV length (incl. new token)
+    d_q: int
+    d_kv: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    cross: bool = False
+    append: bool = True
+    block_kv: int = BLOCK
+
+    @property
+    def kv_width(self) -> int:
+        return 2 * self.kv_heads * self.head_dim
+
+    @property
+    def slots(self) -> int:
+        return len(self.seq_kv)
+
+
+@dataclasses.dataclass(frozen=True)
 class Layer:
     index: int
     ops: Tuple[object, ...]
@@ -85,28 +119,59 @@ def _attn_block(tag: str, seq_q: int, seq_kv: int, d_q: int, d_kv: int,
             GemmOp(f"{tag}_oproj", seq_q, heads * hd, d_q)]
 
 
-def workload_from_plan(plan) -> Workload:
+def workload_from_plan(plan, prefix: str = "") -> Workload:
     """Lower an ``repro.plan.ExecutionPlan`` back into the op graph the
     schedulers execute — no mode re-derivation: the plan *is* the op list
     (attention ``LayerPlan``s + ``GemmPlan``s in recorded op order), and
     per-op modes stay on the plan (``sim.pipeline.simulate_plan`` reads
-    them).  Duck-typed so this module never imports the planner."""
+    them).  ``prefix`` renames every op (serving timelines keep per-step
+    tags distinct — ``sim.simulate_serve``).  Duck-typed so this module
+    never imports the planner."""
     ops: List[Tuple[int, int, object]] = []          # (op_index, layer, op)
     for lp in plan.layers:
         ops.append((lp.op_index, lp.layer_index,
-                    AttnOp(lp.name, lp.seq_q, lp.seq_kv, lp.d_q, lp.d_kv,
-                           lp.heads, lp.kv_heads, lp.head_dim,
+                    AttnOp(prefix + lp.name, lp.seq_q, lp.seq_kv, lp.d_q,
+                           lp.d_kv, lp.heads, lp.kv_heads, lp.head_dim,
                            cross=lp.cross, block_q=lp.block_q,
                            block_kv=lp.block_kv)))
     for g in plan.gemms:
-        ops.append((g.op_index, g.layer_index, GemmOp(g.name, g.m, g.k, g.n)))
-    ops.sort(key=lambda t: t[0])
+        ops.append((g.op_index, g.layer_index,
+                    GemmOp(prefix + g.name, g.m, g.k, g.n)))
+    return _group_ops(plan.model, ops)
+
+
+def _group_ops(model: str,
+               ops: List[Tuple[int, int, object]]) -> Workload:
+    """Fold (op_index, layer_index, op) records into the per-layer op
+    tuples the schedulers walk — shared by the prefill and decode plan
+    lowerings."""
+    ops = sorted(ops, key=lambda t: t[0])
     layers: List[Layer] = []
     for _, li, op in ops:
         if not layers or layers[-1].index != li:
             layers.append(Layer(li, ()))
         layers[-1] = Layer(li, layers[-1].ops + (op,))
-    return Workload(plan.model, tuple(layers))
+    return Workload(model, tuple(layers))
+
+
+def decode_workload_from_plan(plan, prefix: str = "") -> Workload:
+    """Lower an ``repro.plan.DecodePlan`` into the op graph one decode
+    step executes: per model layer, its ``DecodeOp``(s) followed by the
+    step's weight-stationary GEMMs (output projection + FFN at one token
+    per slot).  ``prefix`` renames every op (``f"{prefix}{name}"``) so a
+    multi-step serving timeline keeps per-step tags distinct.  Duck-typed
+    like ``workload_from_plan``."""
+    ops: List[Tuple[int, int, object]] = []
+    for lp in plan.layers:
+        ops.append((lp.op_index, lp.layer_index,
+                    DecodeOp(prefix + lp.name, tuple(lp.seq_kv), lp.d_q,
+                             lp.d_kv, lp.heads, lp.kv_heads, lp.head_dim,
+                             cross=lp.cross, append=not lp.cross,
+                             block_kv=lp.block_kv)))
+    for g in plan.gemms:
+        ops.append((g.op_index, g.layer_index,
+                    GemmOp(prefix + g.name, g.m, g.k, g.n)))
+    return _group_ops(plan.model, ops)
 
 
 def build_workload(cfg, seq_len: int = 0) -> Workload:

@@ -208,3 +208,57 @@ def test_pareto_frontier_helper_on_synthetic_rows():
         assert not any(dominates(r, f) for r in (t1, t2, e))
     # ...but a same-energy/slower row is dominated, not a tie
     assert len(pareto_frontier([row(100, 5.0), row(110, 5.0)])) == 1
+
+
+# ---------------------------------------------------------------------------
+# The energy-model axis (ROADMAP: ENERGY_CONFIGS x HW grid)
+# ---------------------------------------------------------------------------
+
+def test_energy_axis_partitions_cells():
+    ems = [registry.ENERGY_CONFIGS["streamdcim-energy-base"],
+           registry.ENERGY_CONFIGS["streamdcim-energy-dramheavy"]]
+    res = run_sweep(models=["whisper-base"], points=3, seq_lens=(SEQ,),
+                    energy_models=ems)
+    assert res.energy_models() == [e.name for e in ems]
+    assert len(res.rows) == 3 * 2           # one row per (point, table)
+    # latency is cost-table-invariant (same simulation, re-folded energy)
+    by_hw = {}
+    for r in res.rows:
+        by_hw.setdefault(r.hw, []).append(r)
+    for rows in by_hw.values():
+        assert len({r.latency_cycles for r in rows}) == 1
+        assert len({r.energy_pj for r in rows}) == 2  # tables DO differ
+    # frontier extraction never mixes cost tables
+    for em in res.energy_models():
+        assert all(r.energy_model == em
+                   for r in res.pareto(energy_model=em))
+    labels = set(res.knees())
+    assert any(l.endswith("/streamdcim-energy-dramheavy") for l in labels)
+
+
+def test_energy_axis_frontier_sensitivity_report():
+    ems = list(registry.ENERGY_CONFIGS.values())
+    res = run_sweep(models=["whisper-base"], points=4, seq_lens=(SEQ,),
+                    energy_models=ems)
+    sens = res.frontier_sensitivity()
+    assert set(sens) == {"whisper-base"}
+    rec = sens["whisper-base"]
+    assert rec["base"] == ems[0].name
+    assert set(rec["frontier_hw"]) == {e.name for e in ems}
+    for em, j in rec["jaccard_vs_base"].items():
+        assert 0.0 <= j <= 1.0
+    assert rec["jaccard_vs_base"][ems[0].name] == 1.0
+    for hw in rec["stable_hw"]:
+        for front in rec["frontier_hw"].values():
+            assert hw in front
+    d = res.to_dict()
+    assert d["frontier_sensitivity"]["whisper-base"]["base"] == ems[0].name
+    assert d["energy_models"] == [e.name for e in ems]
+
+
+def test_single_energy_model_sweep_unchanged():
+    res = run_sweep(models=["whisper-base"], points=2, seq_lens=(SEQ,))
+    assert res.frontier_sensitivity() == {}
+    assert res.energy_models() == [res.energy_model]
+    # labels carry no energy suffix when only one table swept
+    assert set(res.knees()) == {"whisper-base"}

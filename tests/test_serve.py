@@ -1,0 +1,442 @@
+"""Decode-aware planning + continuous-batching serving (DESIGN.md §11):
+``plan_decode_step`` / ``DecodePlan``, the shared slot schedule, the
+rewritten ``serve.Engine``, ``sim.simulate_serve``, and the cross-path
+agreement guarantees (engine == simulator timeline; planner == simulator
+decode HBM bytes)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.types import (AttnKind, ExecutionMode as EM, PruningConfig)
+from repro.plan import DecodePlan, plan_decode_step, plan_model
+from repro.serve.engine import Engine, Request
+from repro.serve.schedule import ServeRequest, build_schedule
+from repro.sim import simulate_serve
+
+SMOKE = registry.get_config("starcoder2-7b", smoke=True)
+
+
+def _params(cfg=SMOKE):
+    mod = registry.model_module(cfg)
+    return mod.init(jax.random.PRNGKey(0), cfg)
+
+
+def _req(rid, plen, new, arr=0):
+    return Request(rid=rid,
+                   prompt=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=new, arrival_step=arr)
+
+
+# ---------------------------------------------------------------------------
+# The shared schedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_immediate_recycle_and_fifo():
+    reqs = [ServeRequest(0, 8, 2), ServeRequest(1, 8, 6),
+            ServeRequest(2, 4, 3)]
+    s = build_schedule(reqs, slots=2)
+    # rid 0 burns 1 decode step (2 tokens), frees its slot, rid 2 takes it
+    # while rid 1 is still mid-decode.
+    assert s.decode_steps == {0: 1, 1: 5, 2: 2}
+    assert s.admit_step[2] > s.finish_step[0]
+    admit2 = next(st for st in s.steps if (0, 2) in st.admitted
+                  or (1, 2) in st.admitted)
+    assert admit2.decoding, "admission must overlap a neighbour's decode"
+
+
+def test_schedule_single_token_and_idle_gap():
+    reqs = [ServeRequest(0, 4, 1), ServeRequest(1, 4, 2, arrival_step=7)]
+    s = build_schedule(reqs, slots=1)
+    assert s.decode_steps[0] == 0          # prefill-only request
+    assert s.finish_step[0] == s.admit_step[0]
+    assert s.admit_step[1] == 7            # idle gap jumped, not padded
+    assert all(st.admitted or st.decoding for st in s.steps)
+
+
+def test_schedule_kv_lens_grow_by_one():
+    s = build_schedule([ServeRequest(0, 10, 4)], slots=1)
+    kvs = [kv for st in s.steps for _, rid, kv in st.decoding if rid == 0]
+    assert kvs == [11, 12, 13]             # prompt + generated, incl. new
+
+
+# ---------------------------------------------------------------------------
+# DecodePlan
+# ---------------------------------------------------------------------------
+
+def test_decode_plan_json_round_trip():
+    cfg = registry.get_config("qwen2-vl-2b")
+    dp = plan_decode_step(cfg, (300, 17, 513))
+    rt = DecodePlan.from_json(dp.to_json())
+    assert rt == dp
+    assert rt.total_hbm_bytes == dp.total_hbm_bytes
+    assert rt.context == (300, 17, 513)
+    assert rt.layer(dp.layers[0].name).seq_kv == dp.layers[0].seq_kv
+
+
+def test_decode_plan_trace_round_trip():
+    from repro.sim.replay import KernelTrace
+    dp = plan_decode_step(SMOKE, (40,))
+    kt = KernelTrace(op=dp.layers[0].name, kind="decode",
+                     mode=dp.layers[0].mode.value, grid=(1, 1, 1),
+                     block_q=1, block_kv=256, cycles=123, hbm_bytes=456)
+    traced = dp.attach_traces([kt])
+    assert traced.traced_ops == (dp.layers[0].name,)
+    rt = DecodePlan.from_json(traced.to_json())
+    assert rt.layers[0].trace == kt
+    # a prefill-named trace must not attach to a decode op
+    with pytest.raises(ValueError):
+        dp.layers[0].attach_trace(dataclasses.replace(kt, op="l0_self"))
+
+
+def test_decode_plan_rejects_nonsense():
+    with pytest.raises(ValueError):
+        plan_decode_step(SMOKE, ())
+    with pytest.raises(ValueError):
+        plan_decode_step(SMOKE, (0,))
+    with pytest.raises(ValueError):
+        plan_decode_step(registry.get_config("vilbert-base"), (32,))
+    with pytest.raises(ValueError):
+        plan_decode_step(registry.get_config("mamba2-780m"), (32,))
+
+
+def test_decode_plan_sliding_window_clamp():
+    cfg = dataclasses.replace(SMOKE, attn_kind=AttnKind.SLIDING,
+                              sliding_window=64)
+    dp = plan_decode_step(cfg, (100, 30))
+    for lp in dp.layers:
+        assert lp.seq_kv == (64, 30)
+
+
+def test_decode_plan_keep_tokens_shrinks_seq_kv():
+    cfg = dataclasses.replace(
+        registry.get_config("qwen2-vl-2b"),
+        pruning=PruningConfig(enabled=True))
+    ctx = 2048
+    dp = plan_decode_step(cfg, (ctx,))
+    base = plan_decode_step(registry.get_config("qwen2-vl-2b"), (ctx,))
+    seqs = [lp.seq_kv[0] for lp in sorted(dp.layers,
+                                          key=lambda l: l.layer_index)]
+    assert all(a >= b for a, b in zip(seqs, seqs[1:])), \
+        "DTPU pruning must shrink seq_kv monotonically with depth"
+    assert seqs[0] == ctx and seqs[-1] < ctx
+    assert dp.total_hbm_bytes < base.total_hbm_bytes
+    assert dp.total_rewrite_cycles < base.total_rewrite_cycles
+    assert dp.layers[0].keep_tokens == dp.layers[0].seq_kv
+
+
+def test_decode_plan_encdec_cross_is_static():
+    cfg = registry.get_config("whisper-base")
+    dp = plan_decode_step(cfg, (70,))
+    cross = [lp for lp in dp.layers if lp.cross]
+    selfa = [lp for lp in dp.layers if not lp.cross]
+    assert cross and selfa
+    se = cross[0].seq_kv[0]
+    assert all(lp.seq_kv == (se,) for lp in cross)   # encoder KV: fixed
+    assert all(lp.seq_kv == (70,) for lp in selfa)
+
+
+# ---------------------------------------------------------------------------
+# Planner == simulator decode traffic (the tentpole cross-assert)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-vl-2b", "whisper-base"])
+@pytest.mark.parametrize("mode", list(EM))
+def test_sim_decode_bytes_match_plan_per_registry_model(arch, mode):
+    cfg = registry.get_config(arch)
+    reqs = [ServeRequest(0, 24, 4), ServeRequest(1, 300, 3, 1)]
+    res = simulate_serve(cfg, reqs, slots=2, mode=mode, force_mode=True)
+    decode_steps = [s for s in res.steps if s.decoded]
+    assert decode_steps
+    for s in decode_steps:
+        assert s.decode_hbm_bytes == s.predicted_decode_hbm_bytes > 0
+    # and the prediction is the DecodePlan the step ran under
+    kv = decode_steps[-1].kv_lens
+    assert (res.decode_plans[kv].total_hbm_bytes
+            == decode_steps[-1].predicted_decode_hbm_bytes)
+
+
+def test_sim_decode_rewrite_cycles_match_plan():
+    from repro.sim.trace import Trace
+    cfg = registry.get_config("qwen2-vl-2b")
+    res = simulate_serve(cfg, [ServeRequest(0, 513, 2)], slots=1)
+    st = next(s for s in res.steps if s.decoded)
+    tprefix = f"t{st.step}.dec."
+    rw = sum(e.cycles for e in res.result.trace.events
+             if e.kind == "rewrite" and e.tag.startswith(tprefix))
+    assert rw == st.predicted_rewrite_cycles
+
+
+def test_sim_serve_mode_ordering_and_energy():
+    """TILE <= LAYER <= NON on serving traffic too (MHA model), and the
+    timeline trace folds through the energy model."""
+    cfg = registry.get_config("vilbert-base")   # crossmodal: no decode
+    with pytest.raises(ValueError):
+        simulate_serve(cfg, [ServeRequest(0, 8, 2)], slots=1)
+    cfg = registry.get_config("whisper-base")   # MHA: fusion profitable
+    reqs = [ServeRequest(0, 24, 3), ServeRequest(1, 40, 4, 1)]
+    res = {m: simulate_serve(cfg, reqs, slots=2, mode=m, force_mode=True)
+           for m in EM}
+    assert (res[EM.TILE_STREAM].cycles < res[EM.LAYER_STREAM].cycles
+            < res[EM.NON_STREAM].cycles)
+    assert (res[EM.TILE_STREAM].hbm_bytes < res[EM.LAYER_STREAM].hbm_bytes
+            < res[EM.NON_STREAM].hbm_bytes)
+    e = res[EM.TILE_STREAM].energy()
+    assert e.total_pj > 0
+
+
+def test_decode_trace_replays_through_simulate_serve():
+    """A KernelTrace recorded at the decode kernel entry point attaches to
+    the DecodePlan and replays verbatim through the serving simulator."""
+    from repro.kernels import ops
+    from repro.sim.replay import KernelRecorder, recording
+
+    dp0 = plan_decode_step(SMOKE, (11,))
+    lp = dp0.layers[0]
+    rng = jax.random.PRNGKey(1)
+    q = jax.random.normal(rng, (1, SMOKE.num_heads, 1, SMOKE.head_dim),
+                          np.float32)
+    k = jax.random.normal(rng, (1, SMOKE.num_kv_heads, lp.seq_kv[0],
+                                SMOKE.head_dim), np.float32)
+    v = jax.random.normal(rng, (1, SMOKE.num_kv_heads, lp.seq_kv[0],
+                                SMOKE.head_dim), np.float32)
+    rec = KernelRecorder(iters=1, warmup=0)
+    with recording(rec):
+        out = ops.decode_attention_by_plan(lp, q, k, v)
+    assert out.shape == (1, SMOKE.num_heads, 1, SMOKE.head_dim)
+    assert len(rec.records) == 1
+    kt = rec.records[0]
+    assert kt.op == lp.name and kt.kind == "decode"
+    assert kt.resource == "ATTN"
+    assert dp0.attach_traces(rec.records).traced_ops == (lp.name,)
+
+    def decode_plan_fn(kv):
+        # attaches to the steps whose first layer matches the recording
+        return plan_decode_step(SMOKE, kv).attach_traces(rec.records)
+
+    res = simulate_serve(SMOKE, [ServeRequest(0, 10, 3)], slots=1,
+                         decode_plan_fn=decode_plan_fn)
+    assert res.result.replayed_ops >= 1
+
+
+# ---------------------------------------------------------------------------
+# The engine: continuous batching, not waves
+# ---------------------------------------------------------------------------
+
+def test_engine_admits_while_others_decode():
+    params = _params()
+    eng = Engine(SMOKE, params, slots=2, max_len=64)
+    for r in [_req(0, 8, 2), _req(1, 12, 8), _req(2, 6, 4, arr=1)]:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    # rid 2 was admitted at a step where another slot decoded: no waves.
+    mixed = [s for s in eng.step_log if s.admitted and s.decoded]
+    assert mixed, "no admission overlapped a decode — still wave batching?"
+    assert any(2 in s.admitted for s in mixed)
+    for r in done:
+        assert len(r.out_tokens) == r.max_new_tokens
+        assert all(0 <= t < SMOKE.vocab_size for t in r.out_tokens)
+
+
+def test_engine_short_request_recycles_immediately():
+    """Regression (ISSUE satellite): a finished slot must stop decoding —
+    total decode_step calls == sum(max_new_tokens - 1), never the wave
+    max times the batch."""
+    params = _params()
+    eng = Engine(SMOKE, params, slots=2, max_len=64)
+    eng.submit(_req(0, 8, 2))
+    eng.submit(_req(1, 8, 10))
+    done = eng.run()
+    assert eng.decode_calls == (2 - 1) + (10 - 1)
+    short = next(r for r in done if r.rid == 0)
+    assert len(short.out_tokens) == 2
+    # the freed slot is re-usable: a third request would have fit there
+    assert eng.stats()["max_concurrency"] == 2
+    # stats() describe the LAST run: decode_calls reset per run
+    eng.submit(_req(2, 8, 3))
+    eng.run()
+    assert eng.decode_calls == 3 - 1
+
+
+def test_engine_matches_simulate_serve_timeline():
+    params = _params()
+    eng = Engine(SMOKE, params, slots=2, max_len=64)
+    trace = [(0, 5, 6, 0), (1, 12, 3, 0), (2, 7, 4, 1), (3, 9, 2, 4)]
+    for rid, plen, new, arr in trace:
+        eng.submit(_req(rid, plen, new, arr))
+    eng.run()
+    st = eng.stats()
+    sim = simulate_serve(
+        SMOKE, [ServeRequest(r, p, n, a) for r, p, n, a in trace], slots=2)
+    assert sim.decode_steps == st["decode_steps"]
+    assert sim.num_steps == st["steps"]
+    assert dict(sim.schedule.admit_step) == st["admit_step"]
+    assert dict(sim.schedule.finish_step) == st["finish_step"]
+    for erec, srec in zip(eng.step_log, sim.steps):
+        assert erec.step == srec.step
+        assert erec.admitted == srec.admitted
+        assert erec.decoded == srec.decoded
+        assert erec.kv_lens == srec.kv_lens
+        if erec.decode_plan is not None:
+            assert (erec.decode_plan.total_hbm_bytes
+                    == srec.predicted_decode_hbm_bytes)
+
+
+def test_engine_decode_plans_drive_steps():
+    params = _params()
+    eng = Engine(SMOKE, params, slots=2, max_len=64)
+    eng.submit(_req(0, 6, 3))
+    eng.submit(_req(1, 10, 3))
+    eng.run()
+    dps = [s.decode_plan for s in eng.step_log if s.decoded]
+    assert dps and all(dp is not None for dp in dps)
+    for s in eng.step_log:
+        if s.decode_plan is not None:
+            assert s.decode_plan.context == s.kv_lens
+    off = Engine(SMOKE, params, slots=2, max_len=64, plan_decode=False)
+    off.submit(_req(0, 6, 3))
+    off.run()
+    assert all(s.decode_plan is None for s in off.step_log)
+    # the deprecated mode= override carries through to decode plans too
+    forced = Engine(SMOKE, params, slots=1, max_len=64,
+                    mode=EM.NON_STREAM)
+    forced.submit(_req(0, 6, 3))
+    forced.run()
+    fdp = next(s.decode_plan for s in forced.step_log if s.decode_plan)
+    assert fdp.uniform_mode == EM.NON_STREAM
+
+
+def test_engine_queue_is_deque_and_plan_cache_bounded():
+    from collections import deque
+    eng = Engine(SMOKE, params=None, slots=2, max_len=512,
+                 plan_cache_size=4)
+    assert isinstance(eng._queue, deque)
+    plans = [eng.plan_for(8 * (i + 1)) for i in range(10)]
+    assert all(p is not None for p in plans)
+    assert eng.plan_cache_len <= 4
+    # LRU: the most recent length is still cached (same object back)
+    assert eng.plan_for(80) is plans[-1]
+    # decode plans live in their OWN bounded cache: the per-step kv-tuple
+    # churn must not evict the reusable per-prompt-length prefill plans
+    keep = eng.plan_for(80)
+    for i in range(10):
+        eng.decode_plan_for((81 + i,))
+    assert len(eng._decode_plan_cache) <= 4
+    assert eng.plan_for(80) is keep
+
+
+def test_engine_rejects_overflowing_request():
+    eng = Engine(SMOKE, params=None, slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(_req(0, 10, 10))
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-layer prefill dispatch (the mode_for fix)
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_prefill_dispatches_per_layer(monkeypatch):
+    """A heterogeneous plan must reach attention_by_plan once per
+    same-mode segment with *that* segment's mode — not collapse to
+    layers[0].mode — and stay numerically equivalent to the default
+    path."""
+    from repro.kernels import ops
+    from repro.models import transformer as T
+
+    cfg = SMOKE                       # 2 layers
+    params = _params(cfg)
+    plan = plan_model(cfg, seq_len=16).with_layer_modes({0: EM.NON_STREAM})
+    assert plan.heterogeneous
+    assert [lp.mode for lp in plan.layers] == [EM.NON_STREAM,
+                                               plan.layers[1].mode]
+    assert plan.layers[1].mode != EM.NON_STREAM
+
+    seen = []
+    real = ops.attention_by_plan
+
+    def spy(lp, *a, **kw):
+        seen.append(lp.mode)
+        return real(lp, *a, **kw)
+
+    monkeypatch.setattr(ops, "attention_by_plan", spy)
+    toks = {"tokens": np.arange(1, 17, dtype=np.int32)[None, :]}
+    logits, cache = T.prefill(params, cfg, toks, max_len=32, plan=plan)
+    # one trace per same-mode scan segment, in layer order
+    assert seen == [EM.NON_STREAM, plan.layers[1].mode]
+    monkeypatch.setattr(ops, "attention_by_plan", real)
+    base_logits, base_cache = T.prefill(params, cfg, toks, max_len=32)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(base_logits),
+                               atol=2e-3, rtol=2e-3)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(base_cache)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_uniform_plan_prefill_matches_default():
+    cfg = SMOKE
+    params = _params(cfg)
+    plan = plan_model(cfg, seq_len=16)
+    toks = {"tokens": np.arange(3, 19, dtype=np.int32)[None, :]}
+    from repro.models import transformer as T
+    l1, _ = T.prefill(params, cfg, toks, max_len=32, plan=plan)
+    l0, _ = T.prefill(params, cfg, toks, max_len=32)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_engine_serves_heterogeneous_plan():
+    """End to end: an engine pinned to a heterogeneous plan admits and
+    completes requests (per-layer dispatch in the live prefill path)."""
+    cfg = SMOKE
+    params = _params(cfg)
+    plan = plan_model(cfg, seq_len=16).with_layer_modes({1: EM.NON_STREAM})
+    eng = Engine(cfg, params, slots=2, max_len=64, plan=plan)
+    eng.submit(_req(0, 9, 3))
+    eng.submit(_req(1, 14, 2))
+    done = eng.run()
+    assert sorted(len(r.out_tokens) for r in done) == [2, 3]
+
+
+def test_prefill_recording_traces_each_layer():
+    """Under an active kernel recording (+ unrolled scan), the plan
+    dispatch splits per layer so every layer's KernelTrace carries its
+    own op name — a multi-layer segment must not collapse all records
+    onto its representative's name."""
+    from repro.core import runtime
+    from repro.models import transformer as T
+    from repro.sim.replay import KernelRecorder, recording
+
+    cfg = SMOKE
+    params = _params(cfg)
+    plan = plan_model(cfg, seq_len=16)
+    assert plan.uniform_mode is not None and len(plan.layers) > 1
+    toks = {"tokens": np.arange(1, 17, dtype=np.int32)[None, :]}
+    rec = KernelRecorder(iters=1, warmup=0)
+    with runtime.flags(unroll=True), recording(rec):
+        T.prefill(params, cfg, toks, max_len=32, plan=plan)
+    ops_seen = [t.op for t in rec.records if t.kind == "attention"]
+    assert ops_seen == [lp.name for lp in plan.layers]
+    traced = plan.attach_traces(rec.records)
+    assert traced.traced_ops == tuple(lp.name for lp in plan.layers)
+
+
+def test_dispatch_segments_merge_planless_layers():
+    """Layers with no attention op (SSM/hybrid mixers) carry no dispatch
+    decision and merge into the surrounding segment instead of
+    shattering the scan."""
+    from repro.models.transformer import _dispatch_segments
+
+    plan = plan_model(SMOKE, seq_len=16)
+    gap = dataclasses.replace(
+        plan, layers=tuple(lp for lp in plan.layers
+                           if lp.layer_index != 0))
+    segs = _dispatch_segments(SMOKE, gap, 0, SMOKE.num_layers)
+    assert len(segs) == 1 and segs[0][:2] == (0, SMOKE.num_layers)
+    per = _dispatch_segments(SMOKE, plan, 0, SMOKE.num_layers,
+                             per_layer=True)
+    assert [s[:2] for s in per] == [(i, i + 1)
+                                    for i in range(SMOKE.num_layers)]
