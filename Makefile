@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke \
-	replay-smoke serve-smoke
+	replay-smoke serve-smoke obs-smoke
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -37,3 +37,18 @@ replay-smoke:
 # on the step timeline and emits the serving artifact.
 serve-smoke:
 	$(PYTHON) benchmarks/run.py serve --json serve_report.json
+
+# Observability smoke (DESIGN.md §12): the serving smoke with Perfetto
+# timeline export.  bench_serve asserts engine==sim TTFT/TPOT parity;
+# run.py validates each timeline before writing; the re-load here proves
+# the emitted JSON round-trips (loads, non-empty tracks, monotone
+# timestamps), and the §I attribution report renders from the micro-trace.
+obs-smoke:
+	$(PYTHON) benchmarks/run.py serve --json serve_report.json \
+		--perfetto timelines
+	$(PYTHON) -c "import glob; \
+		from repro.obs.timeline import load_timeline, validate_timeline; \
+		files = sorted(glob.glob('timelines/*.perfetto.json')); \
+		assert files, 'no timelines emitted'; \
+		[print(f, validate_timeline(load_timeline(f))) for f in files]"
+	$(PYTHON) -m repro.obs --rewrite-stall

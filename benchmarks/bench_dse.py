@@ -20,7 +20,7 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_dse.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_dse
+from benchmarks.common import csv_row, log_dse, log_timeline
 
 
 def run(points: Optional[int] = None) -> List[str]:
@@ -60,7 +60,20 @@ def run(points: Optional[int] = None) -> List[str]:
                 f"{knee.hw}: {knee.num_macros} macros within "
                 f"{result.knee_tolerance:.0%} of best latency "
                 f"(utilGEN {knee.utilization.get('GEN', 0.0):.2f} "
-                f"utilATTN {knee.utilization.get('ATTN', 0.0):.2f})"))
+                f"utilATTN {knee.utilization.get('ATTN', 0.0):.2f} "
+                f"bottleneck {knee.bottleneck or 'n/a'})"))
+
+            def _knee_timeline(pj=knee.plan_json,
+                               title=f"dse knee {label} ({knee.hw})"):
+                # Replay the knee row from its own plan artifact — the
+                # timeline shows exactly what the sweep scored.
+                from repro.plan import ExecutionPlan
+                from repro.sim import simulate_plan
+                from repro.obs.timeline import timeline_from_sim
+                return timeline_from_sim(
+                    simulate_plan(ExecutionPlan.from_json(pj)), title=title)
+
+            log_timeline(f"dse_{label}_knee", _knee_timeline)
         # Ping-pong EDP at the base geometry, if both variants swept.
         by_hw = {r.hw: r for r in mrows}
         pp = by_hw.get("streamdcim-base")

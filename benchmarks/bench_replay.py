@@ -31,7 +31,7 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_replay.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_replay
+from benchmarks.common import csv_row, log_replay, log_timeline
 
 SEQ = 256          # one tile block: real kernels at recordable CPU cost
 MAX_OPS = 3        # traced ops per model; the rest replay analytically
@@ -49,6 +49,11 @@ def run() -> List[str]:
         traced, rec = record_plan(plan, max_ops=MAX_OPS, iters=1, warmup=1)
         report = fit_calibration(traced)
         log_replay(traced, report)
+        from repro.obs.timeline import timeline_from_records
+        log_timeline(f"replay_{arch}_kernels",
+                     lambda rs=list(rec.records), a=arch:
+                     timeline_from_records(
+                         rs, title=f"recorded kernels ({a})"))
 
         analytic = simulate_plan(plan)
         replayed = simulate_plan(traced)

@@ -24,7 +24,7 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_serve.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_serve
+from benchmarks.common import csv_row, log_serve, log_timeline
 
 SLOTS = 3
 
@@ -70,6 +70,16 @@ def run() -> List[str]:
         slots=SLOTS)
     log_serve(eng, sim)
 
+    # Serving SLO parity (DESIGN.md §12): the engine's executed
+    # step-domain TTFT/TPOT/queue-delay percentiles must match the
+    # simulator's on the shared schedule.
+    from repro.obs.metrics import assert_serve_parity
+    assert_serve_parity(stats, sim.metrics)
+
+    from repro.obs.timeline import timeline_from_serve
+    log_timeline("serve", lambda: timeline_from_serve(
+        sim, title=f"serve {cfg.name} ({SLOTS} slots)"))
+
     # stats() derives from the engine's executed step_log; decode_calls
     # counts actual decode_step invocations — so this compares what ran
     # against what the simulator lowered, not the schedule with itself.
@@ -93,6 +103,12 @@ def run() -> List[str]:
                 f"{sim.cycles} simulated cycles, "
                 f"{sim.hbm_bytes >> 10} KiB HBM, "
                 f"{sim.requests_per_kilocycle():.3f} req/kcycle"),
+        csv_row("serve_slo_metrics", 0.0,
+                f"engine==sim parity OK; queue p95 "
+                f"{sim.metrics['queue_delay']['p95']:.1f} steps, cycle "
+                f"ttft p50/p95 {sim.cycle_metrics['ttft']['p50']:.0f}/"
+                f"{sim.cycle_metrics['ttft']['p95']:.0f}, tpot p50 "
+                f"{sim.cycle_metrics['tpot']['p50']:.0f} cycles"),
     ]
     if not agree:
         raise RuntimeError(

@@ -29,11 +29,12 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_sim.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_plan
+from benchmarks.common import csv_row, log_plan, log_timeline
 from repro.configs import registry
 from repro.core.types import ExecutionMode
 from repro.plan import plan_model
-from repro.sim import simulate_plan, simulate_rewrite_stall
+from repro.sim import (rewrite_stall_trace, simulate_plan,
+                       simulate_rewrite_stall)
 
 
 def run() -> List[str]:
@@ -58,6 +59,12 @@ def run() -> List[str]:
         "sim_rewrite_stall_widebus", 0.0,
         f"2048-bit bus + ping-pong: exposed stall "
         f"{wide['exposed_stall_frac']:.1%}"))
+    from repro.obs.timeline import timeline_from_trace
+    log_timeline("rewrite_stall_serial", lambda: timeline_from_trace(
+        rewrite_stall_trace(hw), title="§I rewrite stall (serial)"))
+    log_timeline("rewrite_stall_pingpong", lambda: timeline_from_trace(
+        rewrite_stall_trace(hw, ping_pong=True, iters=8),
+        title="§I rewrite stall (ping-pong)"))
 
     # --- §III three-way model comparison: one plan per (model, mode) ---
     non_speedups, layer_speedups = [], []
@@ -76,6 +83,10 @@ def run() -> List[str]:
         tile = res[ExecutionMode.TILE_STREAM]
         layer = res[ExecutionMode.LAYER_STREAM]
         non = res[ExecutionMode.NON_STREAM]
+        from repro.obs.timeline import timeline_from_sim
+        log_timeline(f"sim_{arch}_tile",
+                     lambda r=tile, a=arch: timeline_from_sim(
+                         r, title=f"{a} TILE_STREAM"))
 
         # Cross-check: simulated per-op DMA bytes == the plan's prediction
         # for EVERY attention op (same object drives both paths; 10%

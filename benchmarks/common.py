@@ -1,6 +1,7 @@
 """Shared benchmark utilities + v5e napkin constants."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
 
@@ -63,6 +64,16 @@ REPLAY_LOG: list = []
 # (DESIGN.md §11).
 SERVE_LOG: list = []
 
+# Sections register (name, thunk) pairs producing Perfetto timeline
+# documents (``repro.obs.timeline``); ``run.py --perfetto DIR`` renders
+# them.  Thunks, not documents: sections stay cheap when nobody asked
+# for timelines (DESIGN.md §12).
+TIMELINE_LOG: list = []
+
+#: Version stamp on every ``run.py --json`` artifact; bump on breaking
+#: report-shape changes so downstream tooling can reject stale files.
+REPORT_SCHEMA_VERSION = 1
+
 
 def log_plan(plan) -> None:
     """Register an ``repro.plan.ExecutionPlan`` for the --json report."""
@@ -84,8 +95,39 @@ def log_serve(engine, sim_result) -> None:
     SERVE_LOG.append((engine, sim_result))
 
 
+def log_timeline(name: str, thunk: Callable[[], dict]) -> None:
+    """Register a lazily-built Perfetto timeline for ``--perfetto DIR``.
+    ``thunk`` must return a ``trace_event`` document
+    (``repro.obs.timeline.timeline_from_*``); ``name`` becomes the file
+    stem (``DIR/<name>.perfetto.json``)."""
+    TIMELINE_LOG.append((name, thunk))
+
+
 def reset_plan_log() -> None:
     PLAN_LOG.clear()
     DSE_LOG.clear()
     REPLAY_LOG.clear()
     SERVE_LOG.clear()
+    TIMELINE_LOG.clear()
+
+
+def run_metadata() -> dict:
+    """Provenance stamped into every ``--json`` artifact: schema version,
+    git-describable source revision, and toolchain versions — enough for
+    downstream tooling to reject stale or mismatched artifacts."""
+    import platform
+    import subprocess
+    meta = {
+        "schema_version": REPORT_SCHEMA_VERSION,
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+    }
+    try:
+        meta["git"] = subprocess.run(
+            ["git", "describe", "--always", "--dirty", "--tags"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — git absent in some containers
+        meta["git"] = "unknown"
+    return meta

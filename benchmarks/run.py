@@ -86,6 +86,10 @@ def main(argv=None) -> None:
     ap.add_argument("--points", type=int, metavar="N", default=None,
                     help="design-point budget for the dse section "
                          "(presets first; CI smoke)")
+    ap.add_argument("--perfetto", metavar="DIR", default=None,
+                    help="dump Perfetto trace_event timelines registered "
+                         "by the sections that ran (sim/serve/dse/replay) "
+                         "into DIR — open at https://ui.perfetto.dev")
     ap.add_argument("--list", action="store_true", dest="list_sections",
                     help="print available sections and exit")
     args = ap.parse_args(argv)
@@ -108,7 +112,9 @@ def main(argv=None) -> None:
     from benchmarks import common
     common.reset_plan_log()
 
-    report = {"command": "benchmarks/run.py " + " ".join(args.sections),
+    report = {"schema_version": common.REPORT_SCHEMA_VERSION,
+              "command": "benchmarks/run.py " + " ".join(args.sections),
+              "metadata": common.run_metadata(),
               "sections": [], "plans": []}
     print("name,us_per_call,derived")
     failed = 0
@@ -151,6 +157,21 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
         print(f"# json report -> {args.json}", file=sys.stderr)
+
+    if args.perfetto:
+        from repro.obs.timeline import validate_timeline, write_timeline
+        os.makedirs(args.perfetto, exist_ok=True)
+        for name, thunk in common.TIMELINE_LOG:
+            tl = thunk()
+            validate_timeline(tl)
+            stem = "".join(c if c.isalnum() or c in "-_." else "_"
+                           for c in name)
+            path = os.path.join(args.perfetto, f"{stem}.perfetto.json")
+            write_timeline(tl, path)
+            print(f"# perfetto timeline -> {path}", file=sys.stderr)
+        if not common.TIMELINE_LOG:
+            print("# --perfetto: no section registered a timeline",
+                  file=sys.stderr)
 
     if failed:
         sys.exit(1)

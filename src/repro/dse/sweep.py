@@ -141,6 +141,9 @@ class SweepRow:
     # replays the row's latency exactly, like plan_json does analytically.
     calibration_scale: Mapping[str, float] = dataclasses.field(
         default_factory=dict)
+    # Critical resource of the simulated trace (``obs.bottleneck_of``) —
+    # what a next design iteration at this point should attack.
+    bottleneck: str = ""
 
     @property
     def num_macros(self) -> int:
@@ -393,6 +396,7 @@ def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
     returning one row per energy model.  The simulation runs *once*; the
     energy axis is a pure re-fold of the same trace under each pJ-cost
     table (latency/bytes are cost-table-invariant by construction)."""
+    from repro.obs.attribution import bottleneck_of
     from repro.plan.planner import plan_model
     from repro.sim.pipeline import simulate_plan
     from repro.sim.replay import resolve_calibration
@@ -400,6 +404,7 @@ def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
     res = simulate_plan(plan, hw=hw, calibration=calibration)
     scale = resolve_calibration(calibration)
     plan_json = plan.to_json()
+    bottleneck = bottleneck_of(res.trace)
     rows = []
     for em in energy_models:
         rep = res.energy(em)
@@ -412,7 +417,8 @@ def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
             energy_by_resource=dict(rep.by_resource),
             plan_json=plan_json,
             calibration=calibration_label(calibration),
-            calibration_scale=dict(scale) if scale else {}))
+            calibration_scale=dict(scale) if scale else {},
+            bottleneck=bottleneck))
     return rows
 
 

@@ -1,0 +1,110 @@
+"""``python -m repro.obs`` — text utilization / stall report for a saved
+plan artifact or an on-the-fly simulation (DESIGN.md §12).
+
+Usage::
+
+    python -m repro.obs plan.json                  # saved ExecutionPlan
+    python -m repro.obs --model vilbert-base --smoke --mode tile_stream
+    python -m repro.obs --rewrite-stall            # paper §I micro-workload
+    python -m repro.obs plan.json --perfetto out.json   # + Perfetto dump
+    python -m repro.obs plan.json --json           # attribution as JSON
+
+Stale artifacts are rejected: ``ExecutionPlan.from_json`` checks the
+plan's ``version`` stamp and raises on mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.attribution import attribute, format_report
+from repro.obs.timeline import (timeline_from_sim, timeline_from_trace,
+                                validate_timeline, write_timeline)
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Utilization / stall attribution report from a saved "
+                    "ExecutionPlan artifact or an on-the-fly simulation.")
+    p.add_argument("plan", nargs="?", default=None,
+                   help="path to a saved ExecutionPlan JSON artifact")
+    p.add_argument("--model", default=None,
+                   help="simulate a registered model config instead of "
+                        "loading a plan (e.g. vilbert-base)")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the model's smoke-sized config")
+    p.add_argument("--mode", default=None,
+                   choices=["non_stream", "layer_stream", "tile_stream"],
+                   help="force one execution mode (default: planner choice)")
+    p.add_argument("--hw", default=None,
+                   help="hardware preset name (default: plan's / base)")
+    p.add_argument("--seq", type=int, default=0,
+                   help="sequence length override for --model")
+    p.add_argument("--rewrite-stall", action="store_true",
+                   help="report the paper §I rewrite-stall micro-workload")
+    p.add_argument("--ping-pong", action="store_true",
+                   help="with --rewrite-stall: enable the shadow sub-array")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the attribution report as JSON")
+    p.add_argument("--perfetto", metavar="OUT", default=None,
+                   help="also write the Perfetto trace_event timeline here")
+    return p
+
+
+def _simulate(args):
+    """Resolve the CLI to one (SimResult-ish, title) pair."""
+    from repro.configs.registry import get_config, get_hw_config
+    from repro.core.types import ExecutionMode
+    hw = get_hw_config(args.hw) if args.hw else None
+
+    if args.rewrite_stall:
+        from repro.configs.hardware import STREAMDCIM_BASE
+        from repro.sim.pipeline import rewrite_stall_trace
+        trace = rewrite_stall_trace(hw or STREAMDCIM_BASE,
+                                    ping_pong=args.ping_pong)
+        label = "ping-pong" if args.ping_pong else "serial"
+        return None, trace, f"§I rewrite-stall micro-workload ({label})"
+
+    from repro.sim.pipeline import simulate_plan
+    if args.plan:
+        from repro.plan.planner import ExecutionPlan
+        with open(args.plan) as f:
+            plan = ExecutionPlan.from_json(f.read())   # rejects stale version
+        res = simulate_plan(plan, hw=hw)
+        return res, res.trace, f"plan {args.plan} ({plan.model}@{plan.hw})"
+
+    if args.model:
+        from repro.plan.planner import plan_model
+        mode = ExecutionMode(args.mode) if args.mode else None
+        plan = plan_model(get_config(args.model, smoke=args.smoke), hw=hw,
+                          seq_len=args.seq, mode=mode,
+                          force_mode=mode is not None)
+        res = simulate_plan(plan, hw=hw)
+        return res, res.trace, f"{args.model} ({plan.hw})"
+
+    raise SystemExit("nothing to report: pass a plan artifact, --model, "
+                     "or --rewrite-stall (see --help)")
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+    res, trace, title = _simulate(args)
+    report = attribute(trace)
+    if args.as_json:
+        print(json.dumps({"title": title, **report.to_dict()}, indent=2))
+    else:
+        print(format_report(report, title=title))
+    if args.perfetto:
+        tl = (timeline_from_sim(res, title=title) if res is not None
+              else timeline_from_trace(trace, title=title))
+        validate_timeline(tl)
+        write_timeline(tl, args.perfetto)
+        print(f"\nperfetto timeline -> {args.perfetto} "
+              f"(open at https://ui.perfetto.dev)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

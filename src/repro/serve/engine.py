@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import time
 from collections import OrderedDict, deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -37,6 +38,9 @@ import numpy as np
 
 from repro.configs import registry
 from repro.core.types import ExecutionMode, ModelConfig
+from repro.obs.metrics import (METRICS_SCHEMA_VERSION, MetricsRegistry,
+                               RequestSpan, observe_spans, spans_from_steps,
+                               spans_from_timeline, summarize_spans)
 from repro.serve.schedule import Schedule, ServeRequest, build_schedule
 
 
@@ -125,6 +129,11 @@ class Engine:
         self.step_log: List[StepRecord] = []
         self.decode_calls = 0         # actual decode_step invocations
         self.last_schedule: Optional[Schedule] = None
+        # Observability (DESIGN.md §12): per-run lifecycle bookkeeping.
+        self.registry = MetricsRegistry()
+        self._arrivals: Dict[int, int] = {}
+        self._step_walls: Dict[int, Tuple[float, float]] = {}
+        self._prefill_wall_end: Dict[int, float] = {}
 
     def submit(self, req: Request) -> None:
         # The cache peaks at prompt + max_new - 1 entries (the last
@@ -231,13 +240,20 @@ class Engine:
         done: List[Request] = []
         self.step_log = []
         self.decode_calls = 0
+        self.registry = MetricsRegistry()
+        self._arrivals = {r.rid: r.arrival_step for r in reqs}
+        self._step_walls = {}
+        self._prefill_wall_end = {}
         V = self.cfg.vocab_size
         for st in schedule.steps:
+            wall0 = time.perf_counter()
             for slot, rid in st.admitted:
                 r = by_rid[rid]
                 last_logits, cache = self._prefill_one(r)
                 tok = jnp.argmax(last_logits[:, :V], axis=-1)[:, None]
                 r.out_tokens.append(int(tok[0, 0]))
+                # Token #1 just materialized: the wall-clock TTFT mark.
+                self._prefill_wall_end[rid] = time.perf_counter()
                 slot_state[slot] = {"req": r, "cache": cache, "tok": tok}
                 rid_slot[rid] = slot
             dp = None
@@ -258,9 +274,14 @@ class Engine:
                 decoded=tuple(r for _, r, _ in st.decoding),
                 kv_lens=tuple(kv for _, _, kv in st.decoding),
                 decode_plan=dp))
+            self._step_walls[st.step] = (wall0, time.perf_counter())
             for rid in st.finished:
                 done.append(by_rid[rid])
                 del slot_state[rid_slot.pop(rid)]       # recycle the slot
+        self.registry.counter("steps").inc(len(self.step_log))
+        self.registry.counter("decode_calls").inc(self.decode_calls)
+        observe_spans(self.registry, self.request_spans, "steps.")
+        observe_spans(self.registry, self.wall_spans, "wall.")
         return done
 
     # ------------------------------------------------------------------
@@ -271,31 +292,70 @@ class Engine:
     def plan_cache_len(self) -> int:
         return len(self._plan_cache)
 
+    @property
+    def request_spans(self) -> List[RequestSpan]:
+        """Step-domain lifecycle spans derived from the *executed*
+        ``step_log`` — the engine-side half of the serving-metrics parity
+        check (``obs.metrics.assert_serve_parity``, DESIGN.md §12)."""
+        return spans_from_steps(self.step_log, self._arrivals)
+
+    @property
+    def wall_spans(self) -> List[RequestSpan]:
+        """Wall-clock lifecycle spans (seconds) from the per-step
+        timestamps the last ``run`` recorded: first token at the instant
+        each admission's prefill materialized token #1, finish at the end
+        of the request's last step."""
+        if not self._step_walls:
+            return []
+        admit: Dict[int, int] = {}
+        last: Dict[int, int] = {}
+        decodes: Dict[int, int] = {}
+        for rec in self.step_log:
+            for rid in rec.admitted:
+                admit[rid] = rec.step
+                last[rid] = rec.step
+                decodes.setdefault(rid, 0)
+            for rid in rec.decoded:
+                decodes[rid] = decodes.get(rid, 0) + 1
+                last[rid] = rec.step
+        return spans_from_timeline(admit, last, decodes, self._arrivals,
+                                   self._step_walls,
+                                   self._prefill_wall_end, unit="seconds")
+
     def stats(self) -> Dict[str, object]:
         """Summary of the last ``run``: step count, per-request decode
-        steps, admission/finish steps — directly comparable with
-        ``repro.sim.simulate_serve``'s ``ServeSimResult``.
+        steps, admission/finish steps, plus the serving SLO summaries —
+        step-domain TTFT/TPOT/queue-delay/e2e p50/p95/p99 at the top
+        level (directly comparable with ``ServeSimResult.metrics`` via
+        ``obs.metrics.assert_serve_parity``), wall-clock summaries under
+        ``"wall"``, and the raw registry under ``"metrics"``.
 
         Step and decode counts are derived from ``step_log`` — what the
         engine *executed* — not from the schedule it planned to execute,
         so an execution bug cannot hide behind a correct schedule (the
         simulator lowers the same schedule; comparing executed-vs-sim is
-        the meaningful check)."""
+        the meaningful check).  Before any ``run`` — or after a
+        zero-request run — every field is a well-defined zero/empty,
+        never a division error."""
         s = self.last_schedule
-        if s is None:
-            return {"steps": 0, "decode_steps": {}, "decode_calls": 0}
-        decode_steps: Dict[int, int] = {rid: 0 for rid in s.decode_steps}
+        decode_steps: Dict[int, int] = {
+            rid: 0 for rid in (s.decode_steps if s is not None else {})}
         for rec in self.step_log:
             for rid in rec.decoded:
                 decode_steps[rid] = decode_steps.get(rid, 0) + 1
-        return {
+        out: Dict[str, object] = {
+            "schema_version": METRICS_SCHEMA_VERSION,
             "steps": len(self.step_log),
             "decode_steps": decode_steps,
-            "admit_step": dict(s.admit_step),
-            "finish_step": dict(s.finish_step),
+            "admit_step": dict(s.admit_step) if s is not None else {},
+            "finish_step": dict(s.finish_step) if s is not None else {},
             "decode_calls": self.decode_calls,
             "max_concurrency": max(
                 (len(r.admitted) + len(r.decoded) for r in self.step_log),
                 default=0),
             "plan_cache_len": self.plan_cache_len,
         }
+        out.update(summarize_spans(self.request_spans, unit="steps"))
+        out["wall"] = summarize_spans(self.wall_spans, unit="seconds")
+        out["metrics"] = self.registry.to_dict()
+        return out

@@ -71,7 +71,8 @@ from repro.sim.energy import (ENERGY_PRESETS, EnergyModel, EnergyReport,
                               STREAMDCIM_ENERGY_BASE, energy_of,
                               energy_of_trace)
 from repro.sim.macro import MacroArray, MacroMode
-from repro.sim.pipeline import (SimResult, compare_modes, simulate,
+from repro.sim.pipeline import (SimResult, compare_modes,
+                                rewrite_stall_trace, simulate,
                                 simulate_model, simulate_plan,
                                 simulate_rewrite_stall)
 from repro.sim.replay import (CalibrationReport, KernelRecorder,
@@ -89,7 +90,8 @@ __all__ = [
     "STREAMDCIM_WIDEBUS", "ENERGY_PRESETS", "EnergyModel", "EnergyReport",
     "STREAMDCIM_ENERGY_BASE", "energy_of", "energy_of_trace", "MacroArray",
     "MacroMode", "SimResult", "compare_modes", "simulate", "simulate_model",
-    "simulate_plan", "simulate_rewrite_stall", "CalibrationReport",
+    "simulate_plan", "simulate_rewrite_stall", "rewrite_stall_trace",
+    "CalibrationReport",
     "KernelRecorder", "KernelTrace", "active_recorder",
     "analytic_op_profile", "fit_calibration", "record_plan", "recording",
     "ServeSimResult", "ServeStepSim", "simulate_serve",

@@ -576,15 +576,13 @@ def compare_modes(cfg: ModelConfig, hw: HardwareConfig = STREAMDCIM_BASE,
             for m in ExecutionMode}
 
 
-def simulate_rewrite_stall(hw: HardwareConfig = STREAMDCIM_BASE,
-                           n: int = 2048, d: int = 512, *,
-                           ping_pong: bool = False,
-                           iters: int = 4) -> Dict[str, float]:
-    """Paper §I micro-workload: QK^T phases with K = n x d INT8 resident
-    in the macro array (it fits, unlike the §III models).  Serial
-    (layer-based streaming) rewriting stalls the array; with the ping-pong
-    shadow sub-array the next phase's K rewrites during the current
-    phase's compute and only the bus-bound residue is exposed."""
+def rewrite_stall_trace(hw: HardwareConfig = STREAMDCIM_BASE,
+                        n: int = 2048, d: int = 512, *,
+                        ping_pong: bool = False,
+                        iters: int = 4) -> Trace:
+    """The §I micro-workload as a raw ``Trace`` — the input to
+    ``simulate_rewrite_stall``'s arithmetic and to ``obs.attribution``'s
+    reproduction of the 57% stall number."""
     mode = MacroMode.HYBRID if ping_pong else MacroMode.NORMAL
     arr = MacroArray(hw, hw.num_groups, mode)
     rw_cycles = arr.rewrite_cycles(n * d)            # INT8: n*d bytes
@@ -599,7 +597,23 @@ def simulate_rewrite_stall(hw: HardwareConfig = STREAMDCIM_BASE,
         comp = eng.task("compute", "ATTN", comp_cycles,
                         [rw] + comps[-1:], tag=f"it{it}:qk")
         comps.append(comp)
-    trace = eng.run()
+    return eng.run()
+
+
+def simulate_rewrite_stall(hw: HardwareConfig = STREAMDCIM_BASE,
+                           n: int = 2048, d: int = 512, *,
+                           ping_pong: bool = False,
+                           iters: int = 4) -> Dict[str, float]:
+    """Paper §I micro-workload: QK^T phases with K = n x d INT8 resident
+    in the macro array (it fits, unlike the §III models).  Serial
+    (layer-based streaming) rewriting stalls the array; with the ping-pong
+    shadow sub-array the next phase's K rewrites during the current
+    phase's compute and only the bus-bound residue is exposed."""
+    mode = MacroMode.HYBRID if ping_pong else MacroMode.NORMAL
+    arr = MacroArray(hw, hw.num_groups, mode)
+    rw_cycles = arr.rewrite_cycles(n * d)            # INT8: n*d bytes
+    comp_cycles = arr.gemm_cycles(n, d, n)           # stream n q-vectors
+    trace = rewrite_stall_trace(hw, n, d, ping_pong=ping_pong, iters=iters)
     span = trace.makespan
     exposed = span - trace.busy_cycles("ATTN") if arr.overlap_rewrite else 0
     return {

@@ -30,6 +30,9 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.configs.hardware import HardwareConfig
 from repro.core.types import ExecutionMode, ModelConfig
+from repro.obs.metrics import (MetricsRegistry, RequestSpan, observe_spans,
+                               spans_from_steps, spans_from_timeline,
+                               summarize_spans)
 from repro.serve.schedule import Schedule, ServeRequest, build_schedule
 from repro.sim.dataflow import Engine
 from repro.sim.pipeline import (SimResult, _SCHEDULERS, _Scheduler,
@@ -76,6 +79,29 @@ class ServeSimResult:
     result: SimResult                  # whole-timeline trace (energy-ready)
     prefill_plans: Dict[int, object]   # prompt_len -> ExecutionPlan
     decode_plans: Dict[Tuple[int, ...], object]  # kv_lens -> DecodePlan
+    arrivals: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Cycle-domain lifecycle spans (admission/first-token/finish mapped to
+    # simulated cycle bounds) — the *interesting* TTFT/TPOT distributions.
+    cycle_spans: List[RequestSpan] = dataclasses.field(default_factory=list)
+    registry: Optional[MetricsRegistry] = None
+
+    @property
+    def request_spans(self) -> List[RequestSpan]:
+        """Step-domain lifecycle spans from the *executed* step records —
+        the side compared against ``Engine.stats()`` by
+        ``obs.metrics.assert_serve_parity`` (DESIGN.md §12)."""
+        return spans_from_steps(self.steps, self.arrivals)
+
+    @property
+    def metrics(self) -> Dict[str, object]:
+        """Step-domain TTFT/TPOT/queue-delay p50/p95/p99 summary
+        (well-defined zeros for a zero-request run)."""
+        return summarize_spans(self.request_spans, unit="steps")
+
+    @property
+    def cycle_metrics(self) -> Dict[str, object]:
+        """Cycle-domain lifecycle summary over ``cycle_spans``."""
+        return summarize_spans(self.cycle_spans, unit="cycles")
 
     @property
     def cycles(self) -> int:
@@ -117,6 +143,10 @@ class ServeSimResult:
                               for k, p in self.prefill_plans.items()},
             "decode_plans": {",".join(map(str, k)): p.summary()
                              for k, p in self.decode_plans.items()},
+            "metrics": self.metrics,
+            "cycle_metrics": self.cycle_metrics,
+            "request_spans": [s.to_dict() for s in self.request_spans],
+            "cycle_spans": [s.to_dict() for s in self.cycle_spans],
         }
 
 
@@ -234,8 +264,11 @@ def simulate_serve(cfg: ModelConfig,
     # — a per-step bytes_moved(pred=...) scan would be O(steps x events).
     pre_by_step: Dict[int, int] = {}
     dec_by_step: Dict[int, int] = {}
+    # max event end per (admit step, rid): the cycle the request's prefill
+    # — and hence its first token — actually completed (obs lifecycle).
+    pre_end: Dict[Tuple[int, int], int] = {}
     for e in trace.events:
-        if e.resource != "HBM" or not e.bytes or not e.tag.startswith("t"):
+        if not e.tag.startswith("t"):
             continue
         head, _, rest = e.tag.partition(".")
         try:
@@ -243,10 +276,21 @@ def simulate_serve(cfg: ModelConfig,
         except ValueError:
             continue
         if rest.startswith("pre."):
-            pre_by_step[step_no] = pre_by_step.get(step_no, 0) + e.bytes
+            parts = rest.split(".", 2)
+            if len(parts) > 2 and parts[1][:1] == "r":
+                try:
+                    key = (step_no, int(parts[1][1:]))
+                except ValueError:
+                    key = None
+                if key is not None and e.end > pre_end.get(key, 0):
+                    pre_end[key] = e.end
+            if e.resource == "HBM" and e.bytes:
+                pre_by_step[step_no] = pre_by_step.get(step_no, 0) + e.bytes
         elif rest.startswith(_DECODE):
-            dec_by_step[step_no] = dec_by_step.get(step_no, 0) + e.bytes
+            if e.resource == "HBM" and e.bytes:
+                dec_by_step[step_no] = dec_by_step.get(step_no, 0) + e.bytes
     steps: List[ServeStepSim] = []
+    step_bounds: Dict[int, Tuple[int, int]] = {}
     bound = 0
     for st, mark, dp in marks:
         pre_b = pre_by_step.get(st.step, 0)
@@ -278,13 +322,29 @@ def simulate_serve(cfg: ModelConfig,
             prefill_hbm_bytes=pre_b, decode_hbm_bytes=dec_b,
             predicted_decode_hbm_bytes=pred_b,
             predicted_rewrite_cycles=pred_rw))
+        step_bounds[st.step] = (bound, finish[mark])
         bound = finish[mark]
 
+    arrivals = {r.rid: r.arrival_step for r in requests}
+    # Cycle-domain lifecycle: first token when the request's prefill's
+    # last event retired (``pre_end``), fallback to the step's end bound.
+    cycle_spans = spans_from_timeline(
+        schedule.admit_step, schedule.finish_step, schedule.decode_steps,
+        arrivals, step_bounds,
+        {rid: float(pre_end[(a, rid)])
+         for rid, a in schedule.admit_step.items() if (a, rid) in pre_end},
+        unit="cycles")
     sim = SimResult(cfg.name, mode if force_mode else None, hw.name,
                     trace.makespan, trace.bytes_moved("HBM"),
                     tuple(s.cycles for s in steps), trace, hw_cfg=hw,
                     replayed_ops=replayed)
-    return ServeSimResult(workload=cfg.name, slots=slots, schedule=schedule,
-                          steps=steps, result=sim,
-                          prefill_plans=prefill_plans,
-                          decode_plans=decode_plans)
+    res = ServeSimResult(workload=cfg.name, slots=slots, schedule=schedule,
+                         steps=steps, result=sim,
+                         prefill_plans=prefill_plans,
+                         decode_plans=decode_plans,
+                         arrivals=arrivals, cycle_spans=cycle_spans,
+                         registry=MetricsRegistry())
+    res.registry.counter("steps").inc(len(steps))
+    observe_spans(res.registry, res.request_spans, "steps.")
+    observe_spans(res.registry, cycle_spans, "cycles.")
+    return res

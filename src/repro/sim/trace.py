@@ -36,8 +36,27 @@ class Event:
 
     @property
     def op(self) -> str:
-        """First tag segment: the op this event belongs to."""
+        """First tag segment: the op this event belongs to.  A tag with
+        no ``:`` separators (including the empty tag) is returned raw —
+        never an exception, never a silent index assumption."""
         return self.tag.split(":", 1)[0]
+
+    @property
+    def kind_tag(self) -> str:
+        """Second tag segment — the schedule-step name the scheduler
+        tagged this event with (``xdma``, ``rw``, ``qkpv``, ...).  Empty
+        for tags with fewer than two segments."""
+        parts = self.tag.split(":")
+        return parts[1] if len(parts) > 1 else ""
+
+    @property
+    def tile(self) -> str:
+        """Everything after the kind segment — the tile coordinate
+        (``q0k1``, ``s2:kvdma:k0``'s trailing ``k0``-style indices stay
+        joined verbatim).  Empty for tags with fewer than three
+        segments."""
+        parts = self.tag.split(":")
+        return ":".join(parts[2:]) if len(parts) > 2 else ""
 
 
 @dataclasses.dataclass

@@ -1,0 +1,409 @@
+"""Tests for ``repro.obs`` — timelines, serving SLO metrics, attribution
+(DESIGN.md §12) — plus the observability hooks in the engine, the serving
+simulator, and the DSE sweep."""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.types import ExecutionMode as EM
+from repro.obs import attribution, metrics, timeline
+from repro.obs.metrics import (MetricsRegistry, RequestSpan,
+                               assert_serve_parity, percentile,
+                               spans_from_steps, summarize, summarize_spans)
+from repro.serve.engine import Engine, Request
+from repro.serve.schedule import ServeRequest
+from repro.sim import (rewrite_stall_trace, simulate_rewrite_stall,
+                       simulate_serve)
+from repro.sim.trace import Event, Trace
+
+SMOKE = registry.get_config("starcoder2-7b", smoke=True)
+
+
+def _params(cfg=SMOKE):
+    mod = registry.model_module(cfg)
+    return mod.init(jax.random.PRNGKey(0), cfg)
+
+
+def _req(rid, plen, new, arr=0):
+    return Request(rid=rid,
+                   prompt=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=new, arrival_step=arr)
+
+
+def _sreq(rid, plen, new, arr=0):
+    return ServeRequest(rid, plen, new, arr)
+
+
+# ---------------------------------------------------------------------------
+# metrics: percentiles / registry
+# ---------------------------------------------------------------------------
+
+def test_percentile_exact_interpolation():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 1.0) == 4.0
+    assert percentile(vals, 0.5) == 2.5
+    assert percentile([5.0], 0.99) == 5.0
+    assert percentile([], 0.5) == 0.0          # empty sample: defined zero
+    with pytest.raises(ValueError):
+        percentile(vals, 1.5)
+
+
+def test_summarize_empty_is_all_zeros():
+    s = summarize([])
+    assert s == {"count": 0.0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
+                 "p99": 0.0, "max": 0.0}
+
+
+def test_registry_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc()
+    reg.counter("reqs").inc(2)                 # get-or-create: same counter
+    reg.gauge("depth").set(7)
+    for v in (1.0, 2.0, 3.0):
+        reg.histogram("lat").observe(v)
+    d = reg.to_dict()
+    assert d["counters"]["reqs"] == 3
+    assert d["gauges"]["depth"] == 7.0
+    assert d["histograms"]["lat"]["p50"] == 2.0
+    with pytest.raises(ValueError):
+        reg.counter("reqs").inc(-1)            # counters only increase
+
+
+def test_request_span_validation_and_derived_metrics():
+    s = RequestSpan(rid=0, arrival=1.0, admit=3.0, first_token=4.0,
+                    finish=9.0, tokens=6)
+    assert s.queue_delay == 2.0
+    assert s.ttft == 1.0                       # admit -> token1
+    assert s.tpot == 1.0                       # mean inter-token gap
+    assert s.e2e == 8.0
+    single = RequestSpan(rid=1, arrival=0, admit=0, first_token=1,
+                         finish=1, tokens=1)
+    assert single.tpot == 0.0                  # no gaps exist
+    with pytest.raises(ValueError):
+        RequestSpan(rid=2, arrival=5, admit=3, first_token=4, finish=9,
+                    tokens=2)                  # admit before arrival
+    with pytest.raises(ValueError):
+        RequestSpan(rid=3, arrival=0, admit=0, first_token=1, finish=1,
+                    tokens=0)
+
+
+# ---------------------------------------------------------------------------
+# Event tag helpers (satellite: malformed tags)
+# ---------------------------------------------------------------------------
+
+def test_event_tag_helpers_malformed_tags():
+    full = Event(0, "dma", "HBM", 0, 1, tag="cox0_co:xdma:q0k1")
+    assert (full.op, full.kind_tag, full.tile) == ("cox0_co", "xdma", "q0k1")
+    deep = Event(1, "dma", "HBM", 0, 1, tag="d0:s1:kvdma:k2")
+    assert (deep.op, deep.kind_tag, deep.tile) == ("d0", "s1", "kvdma:k2")
+    two = Event(2, "compute", "GEN", 0, 1, tag="ffn0:gemm")
+    assert (two.op, two.kind_tag, two.tile) == ("ffn0", "gemm", "")
+    raw = Event(3, "compute", "GEN", 0, 1, tag="justanop")
+    assert (raw.op, raw.kind_tag, raw.tile) == ("justanop", "", "")
+    empty = Event(4, "compute", "GEN", 0, 1, tag="")
+    assert (empty.op, empty.kind_tag, empty.tile) == ("", "", "")
+
+
+# ---------------------------------------------------------------------------
+# attribution: the §I 57% number, bottlenecks, op classes
+# ---------------------------------------------------------------------------
+
+def test_attribution_reproduces_paper_57_percent():
+    trace = rewrite_stall_trace()              # serial NON/LAYER-style trace
+    rep = attribution.attribute(trace)
+    assert rep.rewrite_stall_fraction == pytest.approx(4 / 7, abs=1e-9)
+    # ... and agrees with both the trace reduction and the §I micro-sim.
+    assert rep.rewrite_stall_fraction == pytest.approx(
+        trace.rewrite_stall_fraction())
+    assert rep.rewrite_stall_fraction == pytest.approx(
+        simulate_rewrite_stall()["rewrite_frac"])
+    assert rep.rewrite_overlapped == 0         # no shadow sub-array
+    assert rep.critical_resource == "ATTN"
+    assert rep.by_op_class["attention"].rewrite_stall_fraction == \
+        pytest.approx(4 / 7, abs=1e-9)
+
+
+def test_attribution_pingpong_rewrites_are_overlapped():
+    rep = attribution.attribute(rewrite_stall_trace(ping_pong=True))
+    assert rep.rewrite_exposed == 0            # all rewrites ride the bus
+    assert rep.rewrite_overlapped > 0
+    assert rep.rewrite_stall_fraction == 0.0
+
+
+def test_op_class_strips_serve_framing():
+    oc = attribution.op_class
+    assert oc("t3.pre.r1.cox0_co") == "attention"
+    assert oc("t4.dec.layer0.decode") == "decode"
+    assert oc("d0.decode") == "decode"
+    assert oc("ffn2") == "ffn"
+    assert oc("t0.pre.r2.ffn1") == "ffn"
+    assert oc("attn0_oproj") == "proj"
+    assert oc("it3") == "attention"            # §I micro-workload phases
+    assert oc("") == "attention"
+
+
+def test_bottleneck_of_and_format_report():
+    t = Trace()
+    t.add(Event(0, "compute", "GEN", 0, 100, tag="a:gemm"))
+    t.add(Event(1, "dma", "HBM", 0, 40, 512, tag="a:xdma"))
+    assert attribution.bottleneck_of(t) == "GEN"
+    text = attribution.format_report(attribution.attribute(t), title="x")
+    assert "GEN" in text and "critical" in text
+    assert attribution.bottleneck_of(Trace()) == ""
+
+
+def test_sweep_row_has_bottleneck():
+    from repro.dse.sweep import simulate_point
+    hw = registry.get_hw_config("streamdcim-base")
+    row = simulate_point(registry.get_config("vilbert-base"), hw, seq_len=64)
+    assert row.bottleneck in row.utilization
+    assert row.to_dict()["bottleneck"] == row.bottleneck
+
+
+# ---------------------------------------------------------------------------
+# timelines
+# ---------------------------------------------------------------------------
+
+def test_timeline_from_trace_and_validation():
+    t = rewrite_stall_trace()
+    tl = timeline.timeline_from_trace(t, title="stall")
+    info = timeline.validate_timeline(tl)
+    assert info["events"] == len(t.events)
+    assert tl["otherData"]["schema_version"] == timeline.TIMELINE_SCHEMA_VERSION
+    json.dumps(tl)                             # must serialize cleanly
+    names = {e["args"]["name"] for e in tl["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "ATTN" in names
+    kinds = {e["cat"] for e in tl["traceEvents"] if e["ph"] == "X"}
+    assert kinds == {"compute", "rewrite"}
+
+
+def test_validate_timeline_rejects_garbage():
+    with pytest.raises(ValueError):
+        timeline.validate_timeline({"traceEvents": []})
+    with pytest.raises(ValueError):
+        timeline.validate_timeline({"traceEvents": [
+            {"ph": "X", "ts": -1.0, "dur": 1.0, "pid": 1, "tid": 1}]})
+    with pytest.raises(ValueError):            # non-monotone within a track
+        timeline.validate_timeline({"traceEvents": [
+            {"ph": "M", "pid": 1, "name": "process_name",
+             "args": {"name": "p"}},
+            {"ph": "X", "ts": 5.0, "dur": 1.0, "pid": 1, "tid": 1},
+            {"ph": "X", "ts": 2.0, "dur": 1.0, "pid": 1, "tid": 1}]})
+
+
+def test_timeline_from_serve_has_step_and_request_tracks():
+    res = simulate_serve(SMOKE, [_sreq(0, 6, 3), _sreq(1, 9, 2, 1)], slots=2)
+    tl = timeline.timeline_from_serve(res, title="serve")
+    timeline.validate_timeline(tl)
+    xs = [e for e in tl["traceEvents"] if e["ph"] == "X"]
+    cats = {e["cat"] for e in xs}
+    assert {"serve-step", "request"} <= cats
+    steps = [e for e in xs if e["cat"] == "serve-step"]
+    assert len(steps) == res.num_steps
+    req = [e for e in xs if e["cat"] == "request"]
+    assert any(e["name"].endswith(":prefill") for e in req)
+    assert any(e["name"].endswith(":decode") for e in req)
+    # request lifecycle slices carry the cycle-domain TTFT
+    assert all("ttft_cycles" in e["args"] for e in req)
+
+
+def test_timeline_from_records_kernels_track(tmp_path):
+    from repro.sim.replay import KernelTrace
+    recs = [KernelTrace(op="attn0", kind="attention", mode="tile_stream",
+                        grid=(1, 2), block_q=64, block_kv=64,
+                        wall_time_s=1e-3, cycles=1000, hbm_bytes=4096,
+                        flops=1 << 20),
+            KernelTrace(op="ffn0", kind="gemm", mode="tile_stream",
+                        grid=(4,), block_q=0, block_kv=0,
+                        wall_time_s=2e-3, cycles=2000, hbm_bytes=8192,
+                        flops=1 << 21)]
+    tl = timeline.timeline_from_records(recs, title="kernels")
+    timeline.validate_timeline(tl)
+    xs = [e for e in tl["traceEvents"] if e["ph"] == "X"]
+    assert [e["ts"] for e in xs] == [0.0, 1000.0]   # laid out end-to-end
+    path = timeline.write_timeline(tl, str(tmp_path / "k.perfetto.json"))
+    assert timeline.validate_timeline(timeline.load_timeline(path))
+
+
+# ---------------------------------------------------------------------------
+# serving SLO metrics: simulator side
+# ---------------------------------------------------------------------------
+
+def test_simulate_serve_metrics_staggered():
+    reqs = [_sreq(0, 6, 4, 0), _sreq(1, 9, 3, 1), _sreq(2, 5, 5, 3)]
+    res = simulate_serve(SMOKE, reqs, slots=2)
+    m = res.metrics
+    assert m["requests"] == 3
+    assert m["tokens"] == 4 + 3 + 5
+    assert m["ttft"]["max"] == 1.0             # token1 lands at admit step end
+    spans = res.request_spans
+    assert [s.tokens for s in spans] == [4, 3, 5]
+    # queue delay: rid2 arrives step 3; both slots busy until rid1 finishes
+    by_rid = {s.rid: s for s in spans}
+    assert by_rid[0].queue_delay == 0.0
+    assert by_rid[2].admit >= 3.0
+    # cycle-domain spans live on the same schedule, in simulated cycles
+    cyc = {s.rid: s for s in res.cycle_spans}
+    assert set(cyc) == set(by_rid)
+    for rid, s in cyc.items():
+        assert s.unit == "cycles"
+        assert s.ttft > 1.0                    # real prefill latency
+        assert s.finish <= res.cycles
+    assert res.cycle_metrics["tpot"]["p50"] > 0
+    # the registry recorded both domains
+    h = res.registry.to_dict()["histograms"]
+    assert h["steps.ttft"]["count"] == 3
+    assert h["cycles.ttft"]["count"] == 3
+
+
+def test_simulate_serve_zero_requests_well_defined():
+    res = simulate_serve(SMOKE, [], slots=2)
+    assert res.num_steps == 0 and res.cycles == 0
+    m = res.metrics
+    assert m["requests"] == 0 and m["tokens"] == 0
+    for metric in metrics.SPAN_METRICS:
+        assert m[metric]["count"] == 0.0
+        assert m[metric]["p99"] == 0.0
+    assert res.cycle_spans == []
+    json.dumps(res.to_dict())                  # artifact serializes
+
+
+def test_simulate_serve_single_request_degenerate():
+    res = simulate_serve(SMOKE, [_sreq(0, 6, 1)], slots=2)
+    m = res.metrics
+    assert m["requests"] == 1 and m["tokens"] == 1
+    assert m["tpot"]["max"] == 0.0             # one token: no gaps
+    assert m["e2e"]["p50"] == 1.0
+    (span,) = res.cycle_spans
+    assert span.tokens == 1 and span.tpot == 0.0
+    assert span.first_token == span.finish == res.cycles
+
+
+# ---------------------------------------------------------------------------
+# engine==sim parity (satellite: all three modes, staggered, degenerate)
+# ---------------------------------------------------------------------------
+
+def test_assert_serve_parity_catches_divergence():
+    res = simulate_serve(SMOKE, [_sreq(0, 6, 3)], slots=1)
+    good = res.metrics
+    assert_serve_parity(good, good)            # self-parity holds
+    bad = dict(good)
+    bad["tokens"] = good["tokens"] + 1
+    with pytest.raises(AssertionError, match="tokens"):
+        assert_serve_parity(bad, good)
+    bad = dict(good)
+    bad["ttft"] = dict(good["ttft"], p99=123.0)
+    with pytest.raises(AssertionError, match="ttft"):
+        assert_serve_parity(bad, good)
+    with pytest.raises(AssertionError, match="missing"):
+        assert_serve_parity({"requests": 1, "tokens": 3}, good)
+
+
+@pytest.mark.parametrize("mode", [None, EM.TILE_STREAM, EM.LAYER_STREAM,
+                                  EM.NON_STREAM])
+def test_engine_sim_slo_parity_across_modes(mode):
+    params = _params()
+    kw = {} if mode is None else {"mode": mode}
+    eng = Engine(SMOKE, params, slots=2, max_len=64, **kw)
+    traffic = [(6, 4, 0), (9, 3, 1), (5, 5, 3), (4, 2, 3)]
+    for rid, (p, n, a) in enumerate(traffic):
+        eng.submit(_req(rid, p, n, a))
+    eng.run()
+    stats = eng.stats()
+    res = simulate_serve(SMOKE,
+                         [_sreq(rid, p, n, a)
+                          for rid, (p, n, a) in enumerate(traffic)],
+                         slots=2, mode=mode, force_mode=mode is not None)
+    assert_serve_parity(stats, res.metrics)
+    assert stats["requests"] == len(traffic)
+    # wall-clock spans exist and share the request population
+    assert stats["wall"]["requests"] == len(traffic)
+    assert stats["wall"]["ttft"]["p50"] > 0
+    assert stats["metrics"]["histograms"]["wall.ttft"]["count"] == 4
+
+
+def test_engine_sim_parity_single_request():
+    params = _params()
+    eng = Engine(SMOKE, params, slots=1, max_len=64)
+    eng.submit(_req(0, 5, 1))
+    eng.run()
+    res = simulate_serve(SMOKE, [_sreq(0, 5, 1)], slots=1)
+    assert_serve_parity(eng.stats(), res.metrics)
+    assert eng.stats()["tpot"]["max"] == 0.0
+
+
+def test_engine_stats_zero_requests_well_defined():
+    eng = Engine(SMOKE, _params(), slots=2, max_len=64)
+    for stats in (eng.stats(), (eng.run(), eng.stats())[1]):
+        assert stats["steps"] == 0
+        assert stats["requests"] == 0 and stats["tokens"] == 0
+        assert stats["decode_steps"] == {}
+        for metric in metrics.SPAN_METRICS:
+            assert stats[metric]["count"] == 0.0
+        assert stats["wall"]["requests"] == 0
+        json.dumps(stats)
+
+
+# ---------------------------------------------------------------------------
+# spans_from_steps on hand-built step records
+# ---------------------------------------------------------------------------
+
+class _Rec:
+    def __init__(self, step, admitted=(), decoded=()):
+        self.step, self.admitted, self.decoded = step, admitted, decoded
+
+
+def test_spans_from_steps_with_idle_gap_and_arrivals():
+    steps = [_Rec(0, admitted=(0,)), _Rec(1, decoded=(0,)),
+             # idle gap: scheduler jumps 2..4
+             _Rec(5, admitted=(1,)), _Rec(6, decoded=(1,)),
+             _Rec(7, decoded=(1,))]
+    spans = spans_from_steps(steps, arrivals={0: 0, 1: 3})
+    by = {s.rid: s for s in spans}
+    assert by[0].finish == 2.0 and by[0].tokens == 2
+    assert by[1].queue_delay == 2.0            # arrived 3, admitted 5
+    assert by[1].ttft == 1.0
+    assert by[1].tpot == 1.0 and by[1].tokens == 3
+    s = summarize_spans(spans)
+    assert s["requests"] == 2 and s["tokens"] == 5
+
+
+# ---------------------------------------------------------------------------
+# benchmark artifact metadata (satellite: schema_version + provenance)
+# ---------------------------------------------------------------------------
+
+def test_run_metadata_schema_version():
+    import sys
+    sys.path.insert(0, ".")                    # repo root for benchmarks/
+    from benchmarks import common
+    meta = common.run_metadata()
+    assert meta["schema_version"] == common.REPORT_SCHEMA_VERSION == 1
+    assert meta["python"] and meta["jax"]
+    assert isinstance(meta["git"], str) and meta["git"]
+
+
+def test_obs_cli_rewrite_stall(capsys):
+    from repro.obs.__main__ import main
+    assert main(["--rewrite-stall"]) == 0
+    out = capsys.readouterr().out
+    assert "57.1%" in out and "critical: ATTN" in out
+
+
+def test_obs_cli_perfetto_roundtrip(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    out = tmp_path / "stall.perfetto.json"
+    assert main(["--rewrite-stall", "--ping-pong",
+                 "--perfetto", str(out)]) == 0
+    tl = timeline.load_timeline(str(out))
+    assert timeline.validate_timeline(tl)["events"] > 0
+    capsys.readouterr()                        # drain the text report
+    assert main(["--rewrite-stall", "--json"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["rewrite_stall_fraction"] == pytest.approx(4 / 7)
