@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke \
-	replay-smoke serve-smoke obs-smoke
+	replay-smoke serve-smoke obs-smoke shard-smoke
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -52,3 +52,17 @@ obs-smoke:
 		assert files, 'no timelines emitted'; \
 		[print(f, validate_timeline(load_timeline(f))) for f in files]"
 	$(PYTHON) -m repro.obs --rewrite-stall
+
+# Chiplet-mesh scale-out smoke (DESIGN.md §13): the chips x topology
+# sweep through plan -> shard -> simulate (byte-exactness asserted on
+# every point), Perfetto timelines with per-chip + NoC-link tracks, and
+# the 4-chip CLI table on the tiny smoke configs.
+shard-smoke:
+	$(PYTHON) benchmarks/run.py shard --json shard_report.json \
+		--perfetto shard_timelines
+	$(PYTHON) -c "import glob; \
+		from repro.obs.timeline import load_timeline, validate_timeline; \
+		files = sorted(glob.glob('shard_timelines/*.perfetto.json')); \
+		assert files, 'no shard timelines emitted'; \
+		[print(f, validate_timeline(load_timeline(f))) for f in files]"
+	$(PYTHON) -m repro.shard --chips 1,4 --smoke

@@ -1,0 +1,79 @@
+"""Chiplet-mesh scale-out section (``run.py shard``) — DESIGN.md §13.
+
+Sweeps ``repro.shard`` over the registry scale-out models x all three
+execution modes x chip counts on a ring mesh, each point run through
+plan -> shard -> simulate with byte-exactness asserted inside the
+simulator.  Reports per (model, mode): the speedup-vs-chips curve, the
+scale-out efficiency at the widest mesh, the resolved sharding axis, and
+the bottleneck resource (``INTERCONNECT`` when the NoC wire plan
+dominates).  The machine-readable sweep registers via
+``common.log_shard`` so ``run.py shard --json`` emits the replayable
+artifact, and the widest mesh's Perfetto timeline (one track group per
+chip + the NoC links) registers via ``common.log_timeline``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List
+
+if __name__ == "__main__":      # allow ``python benchmarks/bench_shard.py``
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+from benchmarks.common import csv_row, log_shard, log_timeline
+
+
+def run() -> List[str]:
+    from repro.shard import run_shard_sweep
+    from repro.shard.sweep import DEFAULT_CHIPS, DEFAULT_MODELS
+
+    result = run_shard_sweep(DEFAULT_MODELS, chips=DEFAULT_CHIPS,
+                             topologies=("ring",), keep_plans=True)
+    log_shard(result)
+
+    rows: List[str] = []
+    cells = {}
+    for r in result.rows:
+        cells.setdefault(result.label(r), []).append(r)
+    rows.append(csv_row(
+        "shard_grid", 0.0,
+        f"{len(result.rows)} points ({len(cells)} cells x "
+        f"chips {list(DEFAULT_CHIPS)}); byte-exactness asserted per point"))
+    widest_overall = None
+    for label, cell in cells.items():
+        cell.sort(key=lambda r: r.chips)
+        widest = cell[-1]
+        curve = " ".join(f"{r.chips}c={r.speedup:.2f}x" for r in cell)
+        rows.append(csv_row(
+            f"shard_{widest.model}_{widest.mode}_speedup", 0.0,
+            f"{curve}; axis {widest.axis}; eff@{widest.chips}c "
+            f"{widest.efficiency:.2f}; bottleneck "
+            f"{widest.bottleneck or 'n/a'}"))
+        if (widest_overall is None
+                or widest.chips > widest_overall.chips):
+            widest_overall = widest
+
+    if widest_overall is not None:
+        def _shard_timeline(pj=widest_overall.plan_json,
+                            title=(f"shard {widest_overall.model} "
+                                   f"{widest_overall.mode} "
+                                   f"{widest_overall.topology}"
+                                   f"{widest_overall.chips}")):
+            # Replay the row from its own serialized ShardedPlan — the
+            # timeline shows exactly what the sweep scored.
+            from repro.obs.timeline import timeline_from_sharded
+            from repro.shard import ShardedPlan, simulate_sharded_plan
+            res = simulate_sharded_plan(ShardedPlan.from_dict(pj))
+            return timeline_from_sharded(res, title=title)
+
+        log_timeline(
+            f"shard_{widest_overall.model}_{widest_overall.mode}"
+            f"_{widest_overall.topology}{widest_overall.chips}",
+            _shard_timeline)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

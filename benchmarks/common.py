@@ -64,6 +64,12 @@ REPLAY_LOG: list = []
 # (DESIGN.md §11).
 SERVE_LOG: list = []
 
+# The shard section registers its ``ShardSweepResult`` here so
+# ``run.py --json`` can emit the scale-out artifact (speedup-vs-chips
+# curves + serialized ShardedPlans) the CI shard-smoke step uploads
+# (DESIGN.md §13).
+SHARD_LOG: list = []
+
 # Sections register (name, thunk) pairs producing Perfetto timeline
 # documents (``repro.obs.timeline``); ``run.py --perfetto DIR`` renders
 # them.  Thunks, not documents: sections stay cheap when nobody asked
@@ -72,7 +78,8 @@ TIMELINE_LOG: list = []
 
 #: Version stamp on every ``run.py --json`` artifact; bump on breaking
 #: report-shape changes so downstream tooling can reject stale files.
-REPORT_SCHEMA_VERSION = 1
+#: v2: reports gained the ``shard`` scale-out block (DESIGN.md §13).
+REPORT_SCHEMA_VERSION = 2
 
 
 def log_plan(plan) -> None:
@@ -95,6 +102,11 @@ def log_serve(engine, sim_result) -> None:
     SERVE_LOG.append((engine, sim_result))
 
 
+def log_shard(result) -> None:
+    """Register a ``repro.shard.ShardSweepResult`` for the --json report."""
+    SHARD_LOG.append(result)
+
+
 def log_timeline(name: str, thunk: Callable[[], dict]) -> None:
     """Register a lazily-built Perfetto timeline for ``--perfetto DIR``.
     ``thunk`` must return a ``trace_event`` document
@@ -108,6 +120,7 @@ def reset_plan_log() -> None:
     DSE_LOG.clear()
     REPLAY_LOG.clear()
     SERVE_LOG.clear()
+    SHARD_LOG.clear()
     TIMELINE_LOG.clear()
 
 

@@ -34,8 +34,8 @@ def _sections(points=None):
 
     from benchmarks import (bench_decode, bench_dse, bench_kernels,
                             bench_pruning, bench_replay,
-                            bench_rewrite_overlap, bench_serve, bench_sim,
-                            bench_stream_modes, roofline)
+                            bench_rewrite_overlap, bench_serve, bench_shard,
+                            bench_sim, bench_stream_modes, roofline)
     return [
         ("bench_stream_modes", "Fig6/Fig7 stream-mode comparison",
          bench_stream_modes.run),
@@ -51,6 +51,8 @@ def _sections(points=None):
          bench_replay.run),
         ("serve", "Continuous-batching serving (engine vs simulate_serve)",
          bench_serve.run),
+        ("shard", "Chiplet-mesh scale-out (speedup-vs-chips, NoC model)",
+         bench_shard.run),
         ("bench_decode", "Decode regime (tile-stream latency win)",
          bench_decode.run),
         ("bench_kernels", "Kernel micro-benchmarks", bench_kernels.run),
@@ -144,6 +146,10 @@ def main(argv=None) -> None:
             report["serve"] = [
                 {"engine": eng.stats(), "sim": sim.to_dict()}
                 for eng, sim in common.SERVE_LOG]
+        if common.SHARD_LOG:
+            # The scale-out artifact (DESIGN.md §13): speedup-vs-chips
+            # curves + per-row serialized ShardedPlans (CI uploads this).
+            report["shard"] = common.SHARD_LOG[-1].to_dict()
         if common.REPLAY_LOG:
             # The calibration artifact (DESIGN.md §10): one entry per
             # recorded model — the fitted CalibrationReport plus the

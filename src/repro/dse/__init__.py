@@ -25,6 +25,12 @@ Artifacts per sweep:
                       much of the frontier survives swapping the table
                       (``python -m repro.dse --energy-axis``).
 
+The scale-out axis (chips x topology x per-chip ``HardwareConfig``,
+DESIGN.md §13) lives in ``repro.shard.sweep`` and is re-exported here:
+``run_shard_sweep`` rows carry speedup-vs-chips and scale-out-efficiency
+columns next to the single-chip sweep's latency/energy ones
+(``python -m repro.shard`` / ``benchmarks/run.py shard``).
+
 Entry points: ``python -m repro.dse`` and ``benchmarks/run.py dse``
 (``--json`` artifact, ``--points N`` budget for CI smoke).
 """
@@ -32,9 +38,12 @@ from repro.dse.sweep import (Axes, DEFAULT_AXES, SweepResult, SweepRow,
                              calibration_label, dominates, grid_points,
                              pareto_frontier, run_sweep, simulate_point,
                              utilization_knee)
+from repro.shard.sweep import (ShardSweepResult, ShardSweepRow,
+                               run_shard_sweep)
 
 __all__ = [
     "Axes", "DEFAULT_AXES", "SweepResult", "SweepRow", "calibration_label",
     "dominates", "grid_points", "pareto_frontier", "run_sweep",
+    "ShardSweepResult", "ShardSweepRow", "run_shard_sweep",
     "simulate_point", "utilization_knee",
 ]

@@ -27,9 +27,11 @@ saved plan artifact (or an on-the-fly model simulation) and can dump the
 Perfetto timeline alongside; ``benchmarks/run.py --perfetto DIR`` dumps
 timelines from every sim/serve/dse section it runs.
 """
-from repro.obs.attribution import (AttributionReport, OpClassBreakdown,
-                                   attribute, bottleneck_of, format_report,
-                                   op_class, rewrite_stall_by_op)
+from repro.obs.attribution import (INTERCONNECT, AttributionReport,
+                                   OpClassBreakdown, attribute,
+                                   base_resource, bottleneck_of,
+                                   format_report, op_class,
+                                   rewrite_stall_by_op)
 from repro.obs.metrics import (METRICS_SCHEMA_VERSION, Counter, Gauge,
                                Histogram, MetricsRegistry, RequestSpan,
                                SPAN_METRICS, assert_serve_parity,
@@ -38,18 +40,21 @@ from repro.obs.metrics import (METRICS_SCHEMA_VERSION, Counter, Gauge,
 from repro.obs.timeline import (KIND_COLORS, RESOURCE_ORDER,
                                 TIMELINE_SCHEMA_VERSION, kernel_events,
                                 load_timeline, timeline_from_records,
-                                timeline_from_serve, timeline_from_sim,
-                                timeline_from_trace, trace_events,
-                                validate_timeline, write_timeline)
+                                timeline_from_serve, timeline_from_sharded,
+                                timeline_from_sim, timeline_from_trace,
+                                trace_events, validate_timeline,
+                                write_timeline)
 
 __all__ = [
-    "AttributionReport", "OpClassBreakdown", "attribute", "bottleneck_of",
+    "INTERCONNECT", "AttributionReport", "OpClassBreakdown", "attribute",
+    "base_resource", "bottleneck_of",
     "format_report", "op_class", "rewrite_stall_by_op",
     "METRICS_SCHEMA_VERSION", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "RequestSpan", "SPAN_METRICS", "assert_serve_parity",
     "percentile", "spans_from_steps", "summarize", "summarize_spans",
     "KIND_COLORS", "RESOURCE_ORDER", "TIMELINE_SCHEMA_VERSION",
     "kernel_events", "load_timeline", "timeline_from_records",
-    "timeline_from_serve", "timeline_from_sim", "timeline_from_trace",
-    "trace_events", "validate_timeline", "write_timeline",
+    "timeline_from_serve", "timeline_from_sharded", "timeline_from_sim",
+    "timeline_from_trace", "trace_events", "validate_timeline",
+    "write_timeline",
 ]

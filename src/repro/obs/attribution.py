@@ -36,7 +36,30 @@ ATTN_RESOURCE = "ATTN"
 #: Shadow sub-array rewrite port: rewrites here overlap compute (§II-C).
 OVERLAP_RESOURCE = "BUS"
 
-_FRAMING = re.compile(r"t\d+|r\d+|pre|dec")
+#: Aggregate label for the inter-chip NoC links of a sharded trace.
+INTERCONNECT = "INTERCONNECT"
+
+#: Link resource prefix — mirrors ``repro.shard.noc.LINK_PREFIX`` (obs
+#: sits below shard in the layering, so the literal is pinned here and a
+#: tier-1 test asserts the two stay equal).
+NOC_LINK_PREFIX = "NOC_"
+
+_FRAMING = re.compile(r"t\d+|r\d+|c\d+|pre|dec")
+
+_CHIP = re.compile(r"c\d+")
+
+
+def base_resource(resource: str) -> str:
+    """Fold a sharded-trace resource name to its single-chip base: the
+    per-chip prefix strips (``c3.ATTN`` -> ``ATTN``) and NoC link
+    instances aggregate (``NOC_L2`` -> ``INTERCONNECT``).  Identity on
+    unprefixed single-chip names."""
+    head, _, rest = resource.partition(".")
+    if rest and _CHIP.fullmatch(head):
+        resource = rest
+    if resource.startswith(NOC_LINK_PREFIX):
+        return INTERCONNECT
+    return resource
 
 
 def op_class(op: str) -> str:
@@ -134,15 +157,16 @@ def attribute(trace) -> AttributionReport:
     rewrite_total = rewrite_exposed = 0
     for e in trace.events:
         cyc = e.cycles
-        busy[e.resource] += cyc
+        res = base_resource(e.resource)
+        busy[res] += cyc
         c = per_class[op_class(e.op)]
         if e.kind in ("compute", "rewrite", "dma", "forward"):
             c[e.kind] += cyc
-        if e.kind == "compute" and e.resource == ATTN_RESOURCE:
+        if e.kind == "compute" and res == ATTN_RESOURCE:
             c["attn_compute"] += cyc
         if e.kind == "rewrite":
             rewrite_total += cyc
-            if e.resource != OVERLAP_RESOURCE:
+            if res != OVERLAP_RESOURCE:
                 rewrite_exposed += cyc
                 c["rewrite_exposed"] += cyc
     makespan = trace.makespan
@@ -169,12 +193,17 @@ def attribute(trace) -> AttributionReport:
 def bottleneck_of(trace) -> str:
     """The critical resource: most busy cycles, ties broken toward the
     compute resources (a tied macro array beats a tied port — compute is
-    what you'd rebalance first)."""
-    busy = trace.aggregates.busy
+    what you'd rebalance first).  Sharded traces fold per-chip resources
+    to their base names and the NoC links to ``INTERCONNECT``, so a
+    mesh whose wire plan dominates reports interconnect-bound."""
+    busy: Dict[str, int] = defaultdict(int)
+    for r, b in trace.aggregates.busy.items():
+        busy[base_resource(r)] += b
     if not busy:
         return ""
     order = {r: i for i, r in enumerate(
-        COMPUTE_RESOURCES + (OVERLAP_RESOURCE, "NOC", "HBM"))}
+        COMPUTE_RESOURCES + (OVERLAP_RESOURCE, "NOC", "HBM",
+                             INTERCONNECT))}
     return max(sorted(busy),
                key=lambda r: (busy[r], -order.get(r, len(order))))
 

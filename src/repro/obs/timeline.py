@@ -44,6 +44,8 @@ _PID_SIM = 1
 _PID_STEPS = 2
 _PID_REQUESTS = 3
 _PID_KERNELS = 4
+_PID_NOC = 9        # shared mesh links (timeline_from_sharded)
+_PID_CHIPS = 10     # chip i renders as pid _PID_CHIPS + i
 
 
 def _meta(pid: int, name: str, tid: Optional[int] = None,
@@ -69,6 +71,23 @@ def _resource_tids(resources: Iterable[str]) -> Dict[str, int]:
     return {r: i + 1 for i, r in enumerate(ordered)}
 
 
+def _slice(e, pid: int, tid: int) -> Dict[str, object]:
+    """One complete ("X") event for a trace event on track (pid, tid)."""
+    return {
+        "name": e.tag or e.kind,
+        "cat": e.kind,
+        "ph": "X",
+        "ts": float(e.start),
+        "dur": float(e.cycles),
+        "pid": pid,
+        "tid": tid,
+        "cname": KIND_COLORS.get(e.kind, "generic_work"),
+        "args": {"tag": e.tag, "op": e.op, "kind_tag": e.kind_tag,
+                 "tile": e.tile, "bytes": e.bytes,
+                 "cycles": e.cycles},
+    }
+
+
 def trace_events(trace, *, pid: int = _PID_SIM,
                  process_name: str = "sim") -> List[Dict[str, object]]:
     """Lower a ``sim.Trace`` to ``trace_event`` dicts: one complete
@@ -80,19 +99,7 @@ def trace_events(trace, *, pid: int = _PID_SIM,
     for res, tid in tids.items():
         out.extend(_meta(pid, res, tid, sort_index=tid))
     for e in sorted(trace.events, key=lambda e: (tids[e.resource], e.start)):
-        out.append({
-            "name": e.tag or e.kind,
-            "cat": e.kind,
-            "ph": "X",
-            "ts": float(e.start),
-            "dur": float(e.cycles),
-            "pid": pid,
-            "tid": tids[e.resource],
-            "cname": KIND_COLORS.get(e.kind, "generic_work"),
-            "args": {"tag": e.tag, "op": e.op, "kind_tag": e.kind_tag,
-                     "tile": e.tile, "bytes": e.bytes,
-                     "cycles": e.cycles},
-        })
+        out.append(_slice(e, pid, tids[e.resource]))
     return out
 
 
@@ -118,6 +125,56 @@ def timeline_from_sim(result, *, title: Optional[str] = None
     """Timeline for a ``SimResult`` (prefill simulation / DSE replay)."""
     return timeline_from_trace(
         result.trace, title=title or f"{result.workload}@{result.hw}")
+
+
+def _link_sort_key(name: str) -> Tuple[str, int]:
+    digits = "".join(ch for ch in name if ch.isdigit())
+    return (name.rstrip("0123456789"), int(digits) if digits else -1)
+
+
+def timeline_from_sharded(result, *, title: Optional[str] = None
+                          ) -> Dict[str, object]:
+    """Timeline for a ``ShardSimResult`` (``repro.shard``): one process
+    per chip carrying its own resource tracks (``c3.ATTN`` renders as
+    the ``ATTN`` track of process ``chip3``) plus a ``noc`` process with
+    one track per mesh link, so collective wire traffic reads directly
+    against the per-chip compute it overlaps — or fails to."""
+    from repro.obs.attribution import NOC_LINK_PREFIX
+    mesh = result.plan.mesh
+    title = title or f"shard:{mesh.name}@{result.hw}"
+    chips: Dict[int, Dict[str, List[object]]] = {}
+    links: Dict[str, List[object]] = {}
+    stray: List[object] = []
+    for e in result.trace.events:
+        r = e.resource
+        if r.startswith(NOC_LINK_PREFIX):
+            links.setdefault(r, []).append(e)
+            continue
+        head, _, base = r.partition(".")
+        if base and head[:1] == "c" and head[1:].isdigit():
+            chips.setdefault(int(head[1:]), {}).setdefault(
+                base, []).append(e)
+        else:
+            stray.append(e)
+    events: List[Dict[str, object]] = []
+    if links:
+        events += _meta(_PID_NOC, "noc")
+        for tid, link in enumerate(sorted(links, key=_link_sort_key), 1):
+            events += _meta(_PID_NOC, link, tid, sort_index=tid)
+            for e in sorted(links[link], key=lambda e: e.start):
+                events.append(_slice(e, _PID_NOC, tid))
+    for i in sorted(chips):
+        pid = _PID_CHIPS + i
+        events += _meta(pid, f"chip{i}")
+        tids = _resource_tids(chips[i])
+        for res, tid in tids.items():
+            events += _meta(pid, res, tid, sort_index=tid)
+            for e in sorted(chips[i][res], key=lambda e: e.start):
+                events.append(_slice(e, pid, tid))
+    if stray:
+        holder = type("_Events", (), {"events": stray})()
+        events += trace_events(holder, process_name="sim")
+    return _wrap(events, title)
 
 
 def step_bounds(steps) -> List[Tuple[int, int, int]]:

@@ -97,7 +97,8 @@ class Engine:
                  plan=None,
                  plan_cache_size: int = 32,
                  plan_decode: bool = True,
-                 mode: Optional[ExecutionMode] = None):
+                 mode: Optional[ExecutionMode] = None,
+                 mesh=None):
         """``plan``: an ``repro.plan.ExecutionPlan`` to serve under (pins
         every admission); default: re-plan per admitted prompt length from
         a bounded LRU cache.  Prefill plans and per-step ``DecodePlan``s
@@ -106,7 +107,10 @@ class Engine:
         per-step
         ``DecodePlan`` compilation (pure-throughput serving; step records
         then carry no plan).  ``mode``: deprecated explicit override
-        (pre-PR-2 API) — skips the planner entirely."""
+        (pre-PR-2 API) — skips the planner entirely.  ``mesh``: a jax
+        mesh (``launch.mesh`` builders); prefill/decode then run under
+        ``shard_map`` with replicated specs (``repro.shard.serve``,
+        DESIGN.md §13) — numerics identical to the mesh-less path."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -123,8 +127,13 @@ class Engine:
         self._prefill_takes_plan = (
             hasattr(self.mod, "prefill")
             and "plan" in inspect.signature(self.mod.prefill).parameters)
-        self._decode = jax.jit(
-            lambda p, c, t: self.mod.decode_step(p, cfg, c, t))
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.shard.serve import mesh_decode_fn
+            self._decode = mesh_decode_fn(self.mod, cfg, mesh)
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t: self.mod.decode_step(p, cfg, c, t))
         self._queue: deque = deque()
         self.step_log: List[StepRecord] = []
         self.decode_calls = 0         # actual decode_step invocations
@@ -212,9 +221,15 @@ class Engine:
             kwargs["plan"] = plan
         else:
             kwargs["mode"] = self.mode_for(len(req.prompt))
-        logits, cache = self.mod.prefill(
-            self.params, self.cfg, {"tokens": toks},
-            max_len=self.max_len, **kwargs)
+        if self.mesh is not None:
+            from repro.shard.serve import mesh_prefill
+            logits, cache = mesh_prefill(
+                self.mod, self.params, self.cfg, {"tokens": toks},
+                mesh=self.mesh, max_len=self.max_len, **kwargs)
+        else:
+            logits, cache = self.mod.prefill(
+                self.params, self.cfg, {"tokens": toks},
+                max_len=self.max_len, **kwargs)
         return logits[:, -1], cache
 
     def run(self, *, greedy: bool = True) -> List[Request]:

@@ -109,10 +109,10 @@ def build_schedule(requests: Sequence[ServeRequest],
     t = 0
     while queue or active:
         admitted: List[Tuple[int, int]] = []
-        free = [s for s in range(slots) if s not in active]
+        free = deque(s for s in range(slots) if s not in active)
         while free and queue and queue[0].arrival_step <= t:
             r = queue.popleft()
-            s = free.pop(0)
+            s = free.popleft()
             active[s] = [r, 1]                   # prefill emits token #1
             admitted.append((s, r.rid))
             admit_step[r.rid] = t

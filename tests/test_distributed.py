@@ -54,6 +54,61 @@ def test_head_sharding_rules():
     assert not SH.experts_shardable(registry.get_config("grok-1-314b"), M)
 
 
+def _specs_by_path(arch, **kwargs):
+    """path -> PartitionSpec for every param leaf, rules evaluated at
+    production axis sizes on the single-device test mesh."""
+    cfg = registry.get_config(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shardings = SH.param_shardings(registry.param_specs(cfg), cfg, mesh,
+                                   axis_sizes=PROD_SIZES, **kwargs)
+    flat, _ = SH._flatten_with_paths(shardings)
+    return dict(flat)
+
+
+def test_megatron_head_split_when_divisible():
+    """64 heads % 16 == 0: attention projections shard their head dim
+    over 'model' (col-parallel qkv, row-parallel o).  FSDP is pushed out
+    of the way (qwen3-32b is over the default threshold) to see the pure
+    Megatron rule."""
+    specs = {p: s.spec
+             for p, s in _specs_by_path("qwen3-32b",
+                                        fsdp_threshold=1e15).items()}
+    wq = [s for p, s in specs.items() if p.endswith("/wq")]
+    wo = [s for p, s in specs.items() if p.endswith("/wo")]
+    # Stacked layer dim replicated; head dim (middle of D,H,hd) sharded.
+    assert wq and all(tuple(s) == (None, None, "model", None) for s in wq)
+    assert wo and all(tuple(s) == (None, "model", None, None) for s in wo)
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-7b", "qwen2-vl-2b"])
+def test_context_parallel_fallback_replicates_attention(arch):
+    """Non-divisible heads (36H, 12H/2KV vs |model|=16): qkv/o weights
+    stay replicated (attention runs context-parallel instead) while the
+    MLP keeps its tensor split."""
+    specs = {p: s.spec for p, s in _specs_by_path(arch).items()}
+    attn = {p: s for p, s in specs.items()
+            if p.split("/")[-1] in ("wq", "wk", "wv", "wo")}
+    assert attn
+    assert all(all(ax is None for ax in tuple(s)) for s in attn.values()), \
+        {p: tuple(s) for p, s in attn.items()}
+    ups = [s for p, s in specs.items() if p.endswith("/w_up")]
+    assert ups and all("model" in tuple(s) for s in ups)
+
+
+def test_fsdp_threshold_gates_data_axis():
+    """starcoder2 (~7e9 params) sits under the default 8e9 threshold —
+    no 'data' factor anywhere; forcing the threshold to 0 turns ZeRO-3
+    sharding on for its replicated attention weights."""
+    def data_sharded(specs):
+        return [p for p, s in specs.items()
+                if any(ax == "data" for ax in tuple(s.spec))]
+    off = _specs_by_path("starcoder2-7b")
+    assert not data_sharded(off)
+    on = _specs_by_path("starcoder2-7b", fsdp_threshold=0)
+    hit = data_sharded(on)
+    assert any(p.split("/")[-1] in ("wq", "wk", "wv", "wo") for p in hit), hit
+
+
 def test_grouped_moe_matches_plain():
     cfg = ModelConfig(name="t", family=Family.MOE, num_layers=1, d_model=64,
                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
