@@ -2,7 +2,11 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke \
-	replay-smoke serve-smoke obs-smoke shard-smoke
+	replay-smoke serve-smoke obs-smoke shard-smoke \
+	bench-baseline bench-check
+
+# Sections that register perf-tracking snapshots (benchmarks/history.py).
+BENCH_SECTIONS := bench_sim serve shard
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -51,7 +55,10 @@ obs-smoke:
 		files = sorted(glob.glob('timelines/*.perfetto.json')); \
 		assert files, 'no timelines emitted'; \
 		[print(f, validate_timeline(load_timeline(f))) for f in files]"
-	$(PYTHON) -m repro.obs --rewrite-stall
+	$(PYTHON) -m repro.obs --rewrite-stall --critpath --whatif ping_pong
+	$(PYTHON) -m repro.obs --model vilbert-base --smoke \
+		--mode layer_stream --critpath --whatif ATTN:2 --whatif HBM:4 \
+		--perfetto timelines/critpath.perfetto.json
 
 # Chiplet-mesh scale-out smoke (DESIGN.md §13): the chips x topology
 # sweep through plan -> shard -> simulate (byte-exactness asserted on
@@ -66,3 +73,14 @@ shard-smoke:
 		assert files, 'no shard timelines emitted'; \
 		[print(f, validate_timeline(load_timeline(f))) for f in files]"
 	$(PYTHON) -m repro.shard --chips 1,4 --smoke
+
+# Perf-regression tracking (DESIGN.md §14): refresh the committed
+# BENCH_<section>.json baselines / compare against them (the CI gate —
+# exits 1 on any out-of-band regression).
+bench-baseline:
+	$(PYTHON) benchmarks/run.py $(BENCH_SECTIONS) \
+		--baseline benchmarks/baselines
+
+bench-check:
+	$(PYTHON) benchmarks/run.py $(BENCH_SECTIONS) \
+		--json bench_check.json --check-baseline benchmarks/baselines

@@ -21,7 +21,7 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_shard.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_shard, log_timeline
+from benchmarks.common import csv_row, log_bench, log_shard, log_timeline
 
 
 def run() -> List[str]:
@@ -41,9 +41,15 @@ def run() -> List[str]:
         f"{len(result.rows)} points ({len(cells)} cells x "
         f"chips {list(DEFAULT_CHIPS)}); byte-exactness asserted per point"))
     widest_overall = None
+    bench_metrics = {
+        "total_collective_bytes": float(sum(r.collective_bytes
+                                            for r in result.rows))}
     for label, cell in cells.items():
         cell.sort(key=lambda r: r.chips)
         widest = cell[-1]
+        key = f"{widest.model}_{widest.mode}_{widest.chips}c"
+        bench_metrics[f"{key}_cycles"] = widest.latency_cycles
+        bench_metrics[f"{key}_speedup"] = widest.speedup
         curve = " ".join(f"{r.chips}c={r.speedup:.2f}x" for r in cell)
         rows.append(csv_row(
             f"shard_{widest.model}_{widest.mode}_speedup", 0.0,
@@ -71,6 +77,19 @@ def run() -> List[str]:
             f"shard_{widest_overall.model}_{widest_overall.mode}"
             f"_{widest_overall.topology}{widest_overall.chips}",
             _shard_timeline)
+
+        # Perf-tracking snapshot (DESIGN.md §14).  Replay the widest row
+        # from its serialized plan for the critical-path summary — the
+        # INTERCONNECT on-path share lands in the committed baseline.
+        from repro.shard import ShardedPlan, simulate_sharded_plan
+        widest_res = simulate_sharded_plan(
+            ShardedPlan.from_dict(widest_overall.plan_json))
+        log_bench("shard", bench_metrics, trace=widest_res.trace,
+                  info={"models": sorted({r.model for r in result.rows}),
+                        "chips": list(DEFAULT_CHIPS),
+                        "widest": f"{widest_overall.model}/"
+                                  f"{widest_overall.mode}/"
+                                  f"{widest_overall.chips}c"})
     return rows
 
 

@@ -29,7 +29,7 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_sim.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_plan, log_timeline
+from benchmarks.common import csv_row, log_bench, log_plan, log_timeline
 from repro.configs import registry
 from repro.core.types import ExecutionMode
 from repro.plan import plan_model
@@ -69,6 +69,8 @@ def run() -> List[str]:
     # --- §III three-way model comparison: one plan per (model, mode) ---
     non_speedups, layer_speedups = [], []
     total_checks = 0
+    bench_metrics = {"rewrite_stall_serial_frac": serial["rewrite_frac"]}
+    bench_trace = None
     for arch in registry.SIM_ARCHS:
         cfg = registry.get_config(arch)
         plans = {m: plan_model(cfg, hw=hw, mode=m, force_mode=True)
@@ -100,6 +102,11 @@ def run() -> List[str]:
                         f"planned {lp.hbm_bytes} bytes for {lp.name}")
         total_checks += sum(len(p.layers) for p in plans.values())
 
+        bench_metrics[f"{arch}_tile_cycles"] = tile.cycles
+        bench_metrics[f"{arch}_tile_hbm_bytes"] = tile.hbm_bytes
+        bench_metrics[f"{arch}_adaptive_cycles"] = adaptive.cycles
+        if bench_trace is None:
+            bench_trace = tile.trace
         non_speedups.append(non.cycles / adaptive.cycles)
         layer_speedups.append(layer.cycles / adaptive.cycles)
         mode_str = (adaptive_plan.uniform_mode.value
@@ -123,6 +130,13 @@ def run() -> List[str]:
     rows.append(csv_row(
         "sim_plan_crosscheck", 0.0,
         f"{total_checks} per-op plan-vs-sim DMA-byte checks passed"))
+
+    # Perf-tracking snapshot (DESIGN.md §14): deterministic simulation
+    # metrics + the causal critical path of the first arch's tile trace.
+    bench_metrics["geomean_vs_non_speedup"] = geomean(non_speedups)
+    bench_metrics["geomean_vs_layer_speedup"] = geomean(layer_speedups)
+    log_bench("bench_sim", bench_metrics, trace=bench_trace,
+              info={"archs": list(registry.SIM_ARCHS), "hw": hw.name})
     return rows
 
 

@@ -76,10 +76,18 @@ SHARD_LOG: list = []
 # for timelines (DESIGN.md §12).
 TIMELINE_LOG: list = []
 
+# Sections register BenchSnapshot inputs here: gating metrics (compared
+# against committed baselines by ``run.py --check-baseline``) plus an
+# optional critical-path summary and non-gating info.  One entry per
+# section name (DESIGN.md §14).
+BENCH_LOG: dict = {}
+
 #: Version stamp on every ``run.py --json`` artifact; bump on breaking
 #: report-shape changes so downstream tooling can reject stale files.
 #: v2: reports gained the ``shard`` scale-out block (DESIGN.md §13).
-REPORT_SCHEMA_VERSION = 2
+#: v3: reports gained the ``bench`` snapshot block + SweepRow.headroom
+#: (DESIGN.md §14).
+REPORT_SCHEMA_VERSION = 3
 
 
 def log_plan(plan) -> None:
@@ -107,6 +115,23 @@ def log_shard(result) -> None:
     SHARD_LOG.append(result)
 
 
+def log_bench(section: str, metrics: dict, *, trace=None,
+              info: dict | None = None) -> None:
+    """Register a section's perf-tracking metrics for the bench-history
+    snapshot path (``run.py --baseline`` / ``--check-baseline``).
+
+    ``metrics`` must be deterministic simulation-domain scalars (cycles,
+    bytes, tokens-per-kilocycle, speedups) — never wall-clock — so
+    baselines compare across machines.  ``trace`` (optional) attaches a
+    causal critical-path summary (``repro.obs.critpath``); ``info``
+    carries non-gating context (never compared)."""
+    entry = {"metrics": dict(metrics), "info": dict(info or {})}
+    if trace is not None:
+        from repro.obs.critpath import critical_path
+        entry["critical_path"] = critical_path(trace).to_dict()
+    BENCH_LOG[section] = entry
+
+
 def log_timeline(name: str, thunk: Callable[[], dict]) -> None:
     """Register a lazily-built Perfetto timeline for ``--perfetto DIR``.
     ``thunk`` must return a ``trace_event`` document
@@ -122,6 +147,7 @@ def reset_plan_log() -> None:
     SERVE_LOG.clear()
     SHARD_LOG.clear()
     TIMELINE_LOG.clear()
+    BENCH_LOG.clear()
 
 
 def run_metadata() -> dict:

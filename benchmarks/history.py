@@ -1,0 +1,206 @@
+"""Bench-history snapshots + regression comparison (DESIGN.md §14).
+
+Seven PRs of perf-sensitive changes shipped with no regression tracking;
+this module is the missing trajectory.  Every bench section that calls
+``common.log_bench`` can be snapshotted to a schema-versioned
+``BENCH_<section>.json`` (``run.py --baseline DIR``) and later compared
+against the committed baseline with direction-aware tolerance bands
+(``run.py --check-baseline DIR`` / ``make bench-check`` — the CI gate).
+
+Snapshot metrics are *deterministic simulation-domain scalars* (cycles,
+HBM bytes, simulated tokens-per-kilocycle, speedups) so baselines are
+machine-independent; wall-clock numbers belong in the non-gating
+``info`` block.  Each snapshot also carries the section's causal
+critical-path summary (``repro.obs.critpath``) so a regression comes
+with its "what chain grew" context attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Mapping, Optional
+
+#: Bump on breaking snapshot-shape changes; ``load_snapshot`` rejects
+#: mismatched files instead of mis-comparing them.
+BENCH_SCHEMA_VERSION = 1
+
+#: Default relative tolerance band: a gating metric may drift this much
+#: in the "worse" direction before the check fails.  Simulation metrics
+#: are deterministic, so the band only absorbs intentional small drifts
+#: (re-baselining is the escape hatch for larger ones).
+DEFAULT_REL_TOL = 0.02
+
+#: Metric-name suffixes where *higher* is better; everything else
+#: (cycles, bytes, pj, fractions of stall...) regresses upward.
+_HIGHER_IS_BETTER = ("tokens_per_kcycle", "requests_per_kcycle",
+                     "speedup", "throughput", "_util")
+
+
+def metric_direction(name: str) -> str:
+    """``"higher"`` if a larger value is an improvement, else
+    ``"lower"``."""
+    return ("higher" if name.endswith(_HIGHER_IS_BETTER) else "lower")
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSnapshot:
+    """One section's perf record at one revision."""
+
+    section: str
+    schema_version: int
+    metrics: Dict[str, float]
+    critical_path: Dict[str, object]
+    info: Dict[str, object]
+    metadata: Dict[str, object]
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def snapshot(section: str, entry: Mapping[str, object],
+             metadata: Optional[Mapping[str, object]] = None
+             ) -> BenchSnapshot:
+    """Build a snapshot from a ``common.BENCH_LOG`` entry."""
+    return BenchSnapshot(
+        section=section,
+        schema_version=BENCH_SCHEMA_VERSION,
+        metrics={k: float(v) for k, v in entry["metrics"].items()},
+        critical_path=dict(entry.get("critical_path", {})),
+        info=dict(entry.get("info", {})),
+        metadata=dict(metadata or {}))
+
+
+def snapshot_name(section: str) -> str:
+    """``bench_sim`` -> ``BENCH_sim.json`` (the ``bench_`` prefix is
+    harness namespacing, not part of the trajectory name)."""
+    short = section[len("bench_"):] if section.startswith("bench_") else section
+    return f"BENCH_{short}.json"
+
+
+def baseline_path(directory: str, section: str) -> str:
+    return os.path.join(directory, snapshot_name(section))
+
+
+def write_snapshot(snap: BenchSnapshot, directory: str) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = baseline_path(directory, snap.section)
+    with open(path, "w") as f:
+        json.dump(snap.to_dict(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_snapshot(path: str) -> BenchSnapshot:
+    with open(path) as f:
+        d = json.load(f)
+    version = d.get("schema_version")
+    if version != BENCH_SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: bench snapshot schema {version!r} != "
+            f"{BENCH_SCHEMA_VERSION} — re-baseline with run.py --baseline")
+    return BenchSnapshot(
+        section=d["section"], schema_version=version,
+        metrics={k: float(v) for k, v in d["metrics"].items()},
+        critical_path=dict(d.get("critical_path", {})),
+        info=dict(d.get("info", {})),
+        metadata=dict(d.get("metadata", {})))
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricDelta:
+    """One metric compared against its baseline."""
+
+    name: str
+    baseline: float
+    current: float
+    direction: str            # "lower" | "higher" is better
+    rel_change: float         # (current - baseline) / |baseline|
+    verdict: str = "ok"       # "ok" | "improvement" | "regression"
+
+    @property
+    def regressed(self) -> bool:
+        return self.verdict == "regression"
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchComparison:
+    """A snapshot vs its baseline: regressions fail the gate, the rest
+    is context."""
+
+    section: str
+    regressions: List[MetricDelta]
+    improvements: List[MetricDelta]
+    unchanged: List[MetricDelta]
+    missing: List[str]        # in baseline, absent from current run
+    new: List[str]            # in current run, absent from baseline
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions and not self.missing
+
+    def format(self) -> str:
+        lines = [f"[{self.section}] "
+                 f"{'OK' if self.ok else 'REGRESSION'}: "
+                 f"{len(self.regressions)} regressed, "
+                 f"{len(self.improvements)} improved, "
+                 f"{len(self.unchanged)} unchanged"]
+        for d in self.regressions:
+            lines.append(f"  REGRESSED {d.name}: {d.baseline:g} -> "
+                         f"{d.current:g} ({d.rel_change:+.2%}, "
+                         f"{d.direction} is better)")
+        for d in self.improvements:
+            lines.append(f"  improved  {d.name}: {d.baseline:g} -> "
+                         f"{d.current:g} ({d.rel_change:+.2%})")
+        for name in self.missing:
+            lines.append(f"  MISSING   {name} (in baseline, not in run)")
+        for name in self.new:
+            lines.append(f"  new       {name} (not in baseline; "
+                         f"re-baseline to start tracking)")
+        return "\n".join(lines)
+
+
+def compare(current: BenchSnapshot, baseline: BenchSnapshot,
+            rel_tol: float = DEFAULT_REL_TOL,
+            tolerances: Optional[Mapping[str, float]] = None
+            ) -> BenchComparison:
+    """Direction-aware comparison with relative tolerance bands.
+
+    A lower-is-better metric regresses when it exceeds
+    ``baseline * (1 + tol)``; a higher-is-better one when it drops below
+    ``baseline * (1 - tol)``.  Zero baselines compare exactly (any
+    nonzero move in the worse direction regresses — there is no relative
+    band around 0).  Per-metric ``tolerances`` override ``rel_tol``.
+    """
+    regressions: List[MetricDelta] = []
+    improvements: List[MetricDelta] = []
+    unchanged: List[MetricDelta] = []
+    missing: List[str] = []
+    for name in sorted(baseline.metrics):
+        if name not in current.metrics:
+            missing.append(name)
+            continue
+        b, c = baseline.metrics[name], current.metrics[name]
+        tol = (tolerances or {}).get(name, rel_tol)
+        direction = metric_direction(name)
+        rel = (c - b) / abs(b) if b else (0.0 if c == b else float("inf"))
+        worse = (c - b) if direction == "lower" else (b - c)
+        band = abs(b) * tol
+        if worse > band:
+            regressions.append(MetricDelta(
+                name=name, baseline=b, current=c, direction=direction,
+                rel_change=rel, verdict="regression"))
+        elif worse < 0:
+            improvements.append(MetricDelta(
+                name=name, baseline=b, current=c, direction=direction,
+                rel_change=rel, verdict="improvement"))
+        else:
+            unchanged.append(MetricDelta(
+                name=name, baseline=b, current=c, direction=direction,
+                rel_change=rel))
+    new = sorted(set(current.metrics) - set(baseline.metrics))
+    return BenchComparison(section=current.section,
+                           regressions=regressions,
+                           improvements=improvements,
+                           unchanged=unchanged,
+                           missing=missing, new=new)

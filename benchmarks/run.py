@@ -92,6 +92,17 @@ def main(argv=None) -> None:
                     help="dump Perfetto trace_event timelines registered "
                          "by the sections that ran (sim/serve/dse/replay) "
                          "into DIR — open at https://ui.perfetto.dev")
+    ap.add_argument("--baseline", metavar="DIR", default=None,
+                    help="write schema-versioned BENCH_<section>.json "
+                         "snapshots for the sections that ran into DIR "
+                         "(commit them to start/refresh the perf "
+                         "trajectory)")
+    ap.add_argument("--check-baseline", metavar="DIR", default=None,
+                    dest="check_baseline",
+                    help="compare this run's bench snapshots against the "
+                         "committed baselines in DIR (tolerance bands, "
+                         "direction-aware); exit 1 on any regression — "
+                         "the `make bench-check` CI gate")
     ap.add_argument("--list", action="store_true", dest="list_sections",
                     help="print available sections and exit")
     args = ap.parse_args(argv)
@@ -159,6 +170,16 @@ def main(argv=None) -> None:
                  "traced_ops": list(plan.traced_ops),
                  "plan_json": plan.to_json()}
                 for plan, rep in common.REPLAY_LOG]
+        if common.BENCH_LOG:
+            # The perf-tracking block (DESIGN.md §14): per-section
+            # gating metrics + critical-path summaries, same shape the
+            # BENCH_<section>.json baselines commit.
+            from benchmarks import history
+            report["bench"] = {
+                sec: history.snapshot(sec, entry,
+                                      metadata=common.run_metadata()
+                                      ).to_dict()
+                for sec, entry in sorted(common.BENCH_LOG.items())}
         report["ok"] = failed == 0
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
@@ -179,7 +200,40 @@ def main(argv=None) -> None:
             print("# --perfetto: no section registered a timeline",
                   file=sys.stderr)
 
-    if failed:
+    if args.baseline or args.check_baseline:
+        from benchmarks import history
+        if not common.BENCH_LOG:
+            print("# no section registered bench metrics "
+                  "(run bench_sim/serve/shard)", file=sys.stderr)
+            sys.exit(2)
+
+    if args.baseline:
+        for sec, entry in sorted(common.BENCH_LOG.items()):
+            snap = history.snapshot(sec, entry,
+                                    metadata=common.run_metadata())
+            path = history.write_snapshot(snap, args.baseline)
+            print(f"# bench baseline -> {path}", file=sys.stderr)
+
+    regressed = False
+    if args.check_baseline:
+        for sec, entry in sorted(common.BENCH_LOG.items()):
+            snap = history.snapshot(sec, entry)
+            path = history.baseline_path(args.check_baseline, sec)
+            if not os.path.exists(path):
+                print(f"# bench-check: no committed baseline {path} — "
+                      f"run with --baseline first", file=sys.stderr)
+                regressed = True
+                continue
+            cmp = history.compare(snap, history.load_snapshot(path))
+            print(cmp.format())
+            if not cmp.ok:
+                regressed = True
+        if regressed:
+            print("# bench-check FAILED: perf regression against "
+                  "committed baselines (re-baseline with --baseline "
+                  "if intentional)", file=sys.stderr)
+
+    if failed or regressed:
         sys.exit(1)
 
 

@@ -144,6 +144,11 @@ class SweepRow:
     # Critical resource of the simulated trace (``obs.bottleneck_of``) —
     # what a next design iteration at this point should attack.
     bottleneck: str = ""
+    # Per-resource causal headroom (``obs.whatif.headroom``): fractional
+    # makespan reduction with that resource free.  Unlike busy-share this
+    # is a what-if over the trace DAG, so a busy-but-off-path resource
+    # scores ~0 — the frontier explains *why* a design wins.
+    headroom: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def num_macros(self) -> int:
@@ -156,6 +161,7 @@ class SweepRow:
         d["energy_by_resource"] = dict(self.energy_by_resource)
         d["hw_params"] = dict(self.hw_params)
         d["calibration_scale"] = dict(self.calibration_scale)
+        d["headroom"] = dict(self.headroom)
         d["num_macros"] = self.num_macros
         return d
 
@@ -397,6 +403,7 @@ def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
     energy axis is a pure re-fold of the same trace under each pJ-cost
     table (latency/bytes are cost-table-invariant by construction)."""
     from repro.obs.attribution import bottleneck_of
+    from repro.obs.whatif import headroom as causal_headroom
     from repro.plan.planner import plan_model
     from repro.sim.pipeline import simulate_plan
     from repro.sim.replay import resolve_calibration
@@ -405,6 +412,7 @@ def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
     scale = resolve_calibration(calibration)
     plan_json = plan.to_json()
     bottleneck = bottleneck_of(res.trace)
+    hroom = causal_headroom(res.trace)
     rows = []
     for em in energy_models:
         rep = res.energy(em)
@@ -418,7 +426,8 @@ def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
             plan_json=plan_json,
             calibration=calibration_label(calibration),
             calibration_scale=dict(scale) if scale else {},
-            bottleneck=bottleneck))
+            bottleneck=bottleneck,
+            headroom=hroom))
     return rows
 
 

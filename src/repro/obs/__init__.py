@@ -21,6 +21,14 @@ cycles go* and what serving actually delivers:
                     overlapped rewrite cycles, the §I 57% rewrite-stall
                     fraction for any trace, and the ``bottleneck`` field
                     on DSE ``SweepRow``s.
+``critpath.py``     Causal critical-path analysis over the stamped event
+                    DAG: the chain that bounds the makespan, per-resource
+                    / per-op-class *critical* shares, exposed-rewrite
+                    on-path cycles (§I, causally), slack histograms.
+``whatif.py``       What-if projection: rescale event durations and
+                    replay the DAG schedule — "R k× faster", "link
+                    bandwidth k×", "ping-pong toggled" — plus the
+                    per-resource ``headroom`` stamped on ``SweepRow``s.
 
 ``python -m repro.obs`` renders a text utilization/stall report from a
 saved plan artifact (or an on-the-fly model simulation) and can dump the
@@ -32,6 +40,8 @@ from repro.obs.attribution import (INTERCONNECT, AttributionReport,
                                    base_resource, bottleneck_of,
                                    format_report, op_class,
                                    rewrite_stall_by_op)
+from repro.obs.critpath import (CritPathReport, compute_slack,
+                                critical_path, format_critpath)
 from repro.obs.metrics import (METRICS_SCHEMA_VERSION, Counter, Gauge,
                                Histogram, MetricsRegistry, RequestSpan,
                                SPAN_METRICS, assert_serve_parity,
@@ -44,11 +54,18 @@ from repro.obs.timeline import (KIND_COLORS, RESOURCE_ORDER,
                                 timeline_from_sim, timeline_from_trace,
                                 trace_events, validate_timeline,
                                 write_timeline)
+from repro.obs.whatif import (WhatIfProjection, format_whatif, headroom,
+                              project, run_whatif, whatif_link_bandwidth,
+                              whatif_ping_pong, whatif_resource)
 
 __all__ = [
     "INTERCONNECT", "AttributionReport", "OpClassBreakdown", "attribute",
     "base_resource", "bottleneck_of",
     "format_report", "op_class", "rewrite_stall_by_op",
+    "CritPathReport", "compute_slack", "critical_path", "format_critpath",
+    "WhatIfProjection", "format_whatif", "headroom", "project",
+    "run_whatif", "whatif_link_bandwidth", "whatif_ping_pong",
+    "whatif_resource",
     "METRICS_SCHEMA_VERSION", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "RequestSpan", "SPAN_METRICS", "assert_serve_parity",
     "percentile", "spans_from_steps", "summarize", "summarize_spans",

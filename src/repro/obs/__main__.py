@@ -8,6 +8,8 @@ Usage::
     python -m repro.obs --rewrite-stall            # paper §I micro-workload
     python -m repro.obs plan.json --perfetto out.json   # + Perfetto dump
     python -m repro.obs plan.json --json           # attribution as JSON
+    python -m repro.obs plan.json --critpath       # causal critical path
+    python -m repro.obs plan.json --whatif ATTN:2 --whatif ping_pong
 
 Stale artifacts are rejected: ``ExecutionPlan.from_json`` checks the
 plan's ``version`` stamp and raises on mismatch.
@@ -49,7 +51,17 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="emit the attribution report as JSON")
     p.add_argument("--perfetto", metavar="OUT", default=None,
-                   help="also write the Perfetto trace_event timeline here")
+                   help="also write the Perfetto trace_event timeline here "
+                        "(critical-path edges as flow events when "
+                        "--critpath is also given)")
+    p.add_argument("--critpath", action="store_true",
+                   help="also report the causal critical path (on-path "
+                        "resource/op-class shares, slack histogram)")
+    p.add_argument("--whatif", metavar="RESOURCE:K", action="append",
+                   default=[],
+                   help="project a what-if scenario on the trace DAG "
+                        "(repeatable): ATTN:2, HBM:4, INTERCONNECT:2, "
+                        "or ping_pong to toggle the shadow sub-array")
     return p
 
 
@@ -92,13 +104,35 @@ def main(argv=None) -> int:
     args = _parser().parse_args(argv)
     res, trace, title = _simulate(args)
     report = attribute(trace)
+    crit = None
+    if args.critpath:
+        from repro.obs.critpath import critical_path, format_critpath
+        crit = critical_path(trace)
+    projections = []
+    if args.whatif:
+        from repro.obs.whatif import format_whatif, run_whatif
+        projections = [run_whatif(trace, spec) for spec in args.whatif]
     if args.as_json:
-        print(json.dumps({"title": title, **report.to_dict()}, indent=2))
+        out = {"title": title, **report.to_dict()}
+        if crit is not None:
+            out["critical_path"] = crit.to_dict()
+        if projections:
+            out["whatif"] = [p.to_dict() for p in projections]
+        print(json.dumps(out, indent=2))
     else:
         print(format_report(report, title=title))
+        if crit is not None:
+            print()
+            print(format_critpath(crit, title=f"critical path — {title}"))
+        if projections:
+            print()
+            print(format_whatif(projections, title=f"what-if — {title}"))
     if args.perfetto:
-        tl = (timeline_from_sim(res, title=title) if res is not None
-              else timeline_from_trace(trace, title=title))
+        tl = (timeline_from_sim(res, title=title,
+                                critical_path=args.critpath)
+              if res is not None
+              else timeline_from_trace(trace, title=title,
+                                       critical_path=args.critpath))
         validate_timeline(tl)
         write_timeline(tl, args.perfetto)
         print(f"\nperfetto timeline -> {args.perfetto} "

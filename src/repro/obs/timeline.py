@@ -89,17 +89,44 @@ def _slice(e, pid: int, tid: int) -> Dict[str, object]:
 
 
 def trace_events(trace, *, pid: int = _PID_SIM,
-                 process_name: str = "sim") -> List[Dict[str, object]]:
+                 process_name: str = "sim",
+                 critical_path: bool = False) -> List[Dict[str, object]]:
     """Lower a ``sim.Trace`` to ``trace_event`` dicts: one complete
     ("X") event per trace event on its resource's track, sorted by start
     within each track (the in-order-per-resource scheduler makes starts
-    monotone, so sorting is just defense against hand-built traces)."""
+    monotone, so sorting is just defense against hand-built traces).
+
+    With ``critical_path=True`` the edges of the causal critical path
+    (``repro.obs.critpath``) are appended as Chrome flow events
+    ("s"/"f" pairs), so Perfetto draws arrows along the chain that
+    bounds the makespan."""
     tids = _resource_tids(e.resource for e in trace.events)
     out: List[Dict[str, object]] = _meta(pid, process_name)
     for res, tid in tids.items():
         out.extend(_meta(pid, res, tid, sort_index=tid))
     for e in sorted(trace.events, key=lambda e: (tids[e.resource], e.start)):
         out.append(_slice(e, pid, tids[e.resource]))
+    if critical_path:
+        from repro.obs.critpath import critical_path as _critpath
+        out.extend(critical_path_flow_events(
+            _critpath(trace).path, tids, pid))
+    return out
+
+
+def critical_path_flow_events(path: Sequence, tids: Mapping[str, int],
+                              pid: int) -> List[Dict[str, object]]:
+    """Chrome flow events along consecutive critical-path edges: an "s"
+    (flow start) anchored at the tail of the source slice and an "f"
+    (flow finish, binding point "e" = enclosing slice end) at the head
+    of the destination slice.  Perfetto renders these as arrows."""
+    out: List[Dict[str, object]] = []
+    for k, (a, b) in enumerate(zip(path, path[1:])):
+        fid = k + 1
+        common = {"cat": "critpath", "name": "critical-path", "id": fid}
+        out.append({**common, "ph": "s", "pid": pid,
+                    "tid": tids[a.resource], "ts": float(a.end)})
+        out.append({**common, "ph": "f", "bp": "e", "pid": pid,
+                    "tid": tids[b.resource], "ts": float(b.start)})
     return out
 
 
@@ -115,16 +142,19 @@ def _wrap(events: List[Dict[str, object]], title: str) -> Dict[str, object]:
     }
 
 
-def timeline_from_trace(trace, *, title: str = "sim") -> Dict[str, object]:
+def timeline_from_trace(trace, *, title: str = "sim",
+                        critical_path: bool = False) -> Dict[str, object]:
     """A complete timeline document for one simulated trace."""
-    return _wrap(trace_events(trace, process_name=title), title)
+    return _wrap(trace_events(trace, process_name=title,
+                              critical_path=critical_path), title)
 
 
-def timeline_from_sim(result, *, title: Optional[str] = None
-                      ) -> Dict[str, object]:
+def timeline_from_sim(result, *, title: Optional[str] = None,
+                      critical_path: bool = False) -> Dict[str, object]:
     """Timeline for a ``SimResult`` (prefill simulation / DSE replay)."""
     return timeline_from_trace(
-        result.trace, title=title or f"{result.workload}@{result.hw}")
+        result.trace, title=title or f"{result.workload}@{result.hw}",
+        critical_path=critical_path)
 
 
 def _link_sort_key(name: str) -> Tuple[str, int]:
@@ -275,8 +305,12 @@ def validate_timeline(obj: Mapping[str, object]) -> Dict[str, int]:
     """The CI gate for emitted timelines: the document must carry a
     non-empty ``traceEvents`` list with at least one named track; every
     duration event needs numeric non-negative ts/dur and timestamps must
-    be monotone non-decreasing within each (pid, tid) track.  Returns
-    ``{"events": n, "tracks": m}``; raises ValueError on any violation."""
+    be monotone non-decreasing within each (pid, tid) track.  Flow
+    events ("s"/"t"/"f" — critical-path arrows) must carry a numeric
+    non-negative ts and an id, and are exempt from the per-track
+    monotonicity check (they anchor to slices, not to track order).
+    Returns ``{"events": n, "tracks": m}``; raises ValueError on any
+    violation."""
     events = obj.get("traceEvents")
     if not isinstance(events, list) or not events:
         raise ValueError("timeline has no traceEvents")
@@ -288,6 +322,13 @@ def validate_timeline(obj: Mapping[str, object]) -> Dict[str, int]:
         if ph == "M":
             if e.get("name") in ("process_name", "thread_name"):
                 tracks.add((e.get("pid"), e.get("tid")))
+            continue
+        if ph in ("s", "t", "f"):
+            ts = e.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                raise ValueError(f"flow event {i}: bad ts {ts!r}")
+            if e.get("id") is None:
+                raise ValueError(f"flow event {i}: missing flow id")
             continue
         if ph != "X":
             raise ValueError(f"event {i}: unsupported phase {ph!r}")

@@ -70,15 +70,38 @@ class Engine:
     def run(self) -> Trace:
         trace = Trace()
         free: Dict[str, int] = {}
+        last_on: Dict[str, int] = {}   # last emitted event per resource
         end: List[int] = [0] * len(self._tasks)
+        # Resolved predecessors per task: data deps with zero-cost SYNC
+        # joins flattened to the real events behind them, plus the
+        # in-order resource-occupancy predecessor.  Stamped onto every
+        # emitted Event so the trace is a self-contained scheduling DAG
+        # (repro.obs.critpath / repro.obs.whatif rebuild the schedule
+        # from events alone).
+        preds: List[Tuple[int, ...]] = [()] * len(self._tasks)
         for i, t in enumerate(self._tasks):
             start = max([end[d] for d in t.deps], default=0)
-            start = max(start, free.get(t.resource, 0))
+            resolved: List[int] = []
+            for d in t.deps:
+                if self._tasks[d].resource == "SYNC":
+                    resolved.extend(preds[d])
+                else:
+                    resolved.append(d)
+            if t.resource != "SYNC":
+                start = max(start, free.get(t.resource, 0))
+                rp = last_on.get(t.resource)
+                if rp is not None:
+                    resolved.append(rp)
+            seen: set = set()
+            deps = tuple(d for d in resolved
+                         if not (d in seen or seen.add(d)))
+            preds[i] = deps
             end[i] = start + t.cycles
             if t.resource != "SYNC":
                 free[t.resource] = end[i]
+                last_on[t.resource] = i
                 trace.add(Event(i, t.kind, t.resource, start, end[i],
-                                t.nbytes, t.tag))
+                                t.nbytes, t.tag, deps=deps))
         self.finish_times = end
         return trace
 

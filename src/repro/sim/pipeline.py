@@ -70,6 +70,12 @@ class SimResult:
         """Energy-delay product, pJ * cycles (DESIGN.md §9)."""
         return self.energy(model).edp
 
+    def critical_path(self):
+        """Causal critical-path report for this run's trace
+        (``repro.obs.critpath``, DESIGN.md §14)."""
+        from repro.obs.critpath import critical_path
+        return critical_path(self.trace)
+
 
 class _Scheduler:
     """Shared structure: layers chain sequentially; ops chain within a

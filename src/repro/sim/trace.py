@@ -8,16 +8,26 @@ utilization, DMA bytes (optionally filtered by op class), and the rewrite
 stall fraction that reproduces the paper's §I analysis.
 
 Reductions are served from a cached single-pass aggregate (rebuilt lazily,
-invalidated by ``add``): a DSE sweep (``repro.dse``) summarizes thousands
-of simulated traces, so per-call O(events) scans would go quadratic.
-The energy fold (``repro.sim.energy``) reads the cached makespan and does
-its own single event pass (per-op attribution needs per-event costs).
+invalidated by any mutation of the event list — ``add``, direct
+``trace.events.append``, slice assignment, ``sort`` — via the
+version-counting ``_EventList``): a DSE sweep (``repro.dse``) summarizes
+thousands of simulated traces, so per-call O(events) scans would go
+quadratic.  The energy fold (``repro.sim.energy``) reads the cached
+makespan and does its own single event pass (per-op attribution needs
+per-event costs).
+
+Every event also carries ``deps`` — the task ids of the events whose
+completion gated its start (data dependencies, with zero-cost SYNC
+barriers resolved transitively, plus the in-order resource-occupancy
+predecessor).  This makes any ``Trace`` a scheduling DAG: for every
+event, ``start == 0`` or ``start == max(end of some dep)``, which is what
+``repro.obs.critpath`` and ``repro.obs.whatif`` build on.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +39,7 @@ class Event:
     end: int
     bytes: int = 0
     tag: str = ""      # "cox0_co:xdma:q0k1" — op, kind, tile
+    deps: Tuple[int, ...] = ()   # predecessor task ids (data + resource)
 
     @property
     def cycles(self) -> int:
@@ -59,6 +70,78 @@ class Event:
         return ":".join(parts[2:]) if len(parts) > 2 else ""
 
 
+class _EventList(list):
+    """A ``list`` that counts its mutations.
+
+    ``Trace`` keys its cached aggregates on ``version`` so *any* mutation
+    — ``append``/``extend`` (replay paths call ``trace.events.append``
+    directly), but also same-length in-place replacement
+    (``trace.events[i] = ...``), ``sort``, ``remove`` — invalidates the
+    cache.  The previous length-only check missed every mutation that
+    kept ``len()`` constant.
+    """
+
+    __slots__ = ("version",)
+
+    def __init__(self, iterable=()):
+        super().__init__(iterable)
+        self.version = 0
+
+    def _bump(self):
+        self.version += 1
+
+    def append(self, item):
+        super().append(item)
+        self._bump()
+
+    def extend(self, iterable):
+        super().extend(iterable)
+        self._bump()
+
+    def insert(self, index, item):
+        super().insert(index, item)
+        self._bump()
+
+    def remove(self, item):
+        super().remove(item)
+        self._bump()
+
+    def pop(self, index=-1):
+        item = super().pop(index)
+        self._bump()
+        return item
+
+    def clear(self):
+        super().clear()
+        self._bump()
+
+    def sort(self, **kwargs):
+        super().sort(**kwargs)
+        self._bump()
+
+    def reverse(self):
+        super().reverse()
+        self._bump()
+
+    def __setitem__(self, index, value):
+        super().__setitem__(index, value)
+        self._bump()
+
+    def __delitem__(self, index):
+        super().__delitem__(index)
+        self._bump()
+
+    def __iadd__(self, other):
+        result = super().__iadd__(other)
+        self._bump()
+        return result
+
+    def __imul__(self, other):
+        result = super().__imul__(other)
+        self._bump()
+        return result
+
+
 @dataclasses.dataclass
 class _Aggregates:
     """One-pass reduction over the event list (see ``Trace._agg``)."""
@@ -72,25 +155,35 @@ class _Aggregates:
 
 
 class Trace:
-    """Append-only event log with cached summary reductions."""
+    """Event log with cached summary reductions."""
 
     def __init__(self) -> None:
-        self.events: list[Event] = []
+        self._events = _EventList()
         self._agg: Optional[_Aggregates] = None
-        self._agg_n = -1              # event count the cache was built at
+        self._agg_version = -1        # list version the cache was built at
+
+    @property
+    def events(self) -> "_EventList":
+        return self._events
+
+    @events.setter
+    def events(self, value) -> None:
+        # Wholesale replacement (tests / ad-hoc trace surgery): rewrap so
+        # future in-place mutations keep invalidating the cache.
+        self._events = _EventList(value)
+        self._agg = None
 
     def add(self, ev: Event) -> None:
-        self.events.append(ev)
-        self._agg = None              # invalidate cached aggregates
+        self._events.append(ev)
 
     @property
     def aggregates(self) -> _Aggregates:
-        # Rebuilt lazily; the count check also catches direct
-        # ``trace.events.append`` (events are frozen, so append is the
-        # only way the list changes).
-        if self._agg is None or self._agg_n != len(self.events):
+        # Rebuilt lazily; the version check catches every mutation of the
+        # event list, including same-length in-place replacement that the
+        # old length-only check missed.
+        if self._agg is None or self._agg_version != self._events.version:
             self._agg = self._reduce()
-            self._agg_n = len(self.events)
+            self._agg_version = self._events.version
         return self._agg
 
     def _reduce(self) -> _Aggregates:

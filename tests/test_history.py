@@ -1,0 +1,160 @@
+"""Perf-regression tracking tests (DESIGN.md §14, benchmarks/history.py):
+snapshot round-trips, schema gating, direction-aware tolerance-band
+comparison, and the injected-regression drill against the committed
+``benchmarks/baselines/BENCH_*.json`` files — proving the CI gate trips.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import history
+from benchmarks.history import (BENCH_SCHEMA_VERSION, BenchSnapshot,
+                                baseline_path, compare, load_snapshot,
+                                metric_direction, snapshot, snapshot_name,
+                                write_snapshot)
+
+BASELINES = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "baselines")
+
+
+def _snap(metrics, section="unit"):
+    return snapshot(section, {"metrics": dict(metrics)})
+
+
+# ---------------------------------------------------------------------------
+# Snapshot plumbing
+# ---------------------------------------------------------------------------
+
+def test_snapshot_name_strips_bench_prefix():
+    assert snapshot_name("bench_sim") == "BENCH_sim.json"
+    assert snapshot_name("serve") == "BENCH_serve.json"
+    assert baseline_path("d", "shard").endswith(os.path.join(
+        "d", "BENCH_shard.json"))
+
+
+def test_snapshot_write_load_roundtrip(tmp_path):
+    entry = {"metrics": {"cycles": 123.0, "foo_speedup": 2.5},
+             "info": {"hw": "streamdcim-base"},
+             "critical_path": {"makespan": 123, "path_events": 4}}
+    snap = snapshot("bench_sim", entry, metadata={"git": "abc"})
+    path = write_snapshot(snap, str(tmp_path))
+    assert os.path.basename(path) == "BENCH_sim.json"
+    loaded = load_snapshot(path)
+    assert loaded.section == "bench_sim"
+    assert loaded.metrics == snap.metrics
+    assert loaded.critical_path == snap.critical_path
+    assert loaded.schema_version == BENCH_SCHEMA_VERSION
+    # stable on-disk form: sorted keys, trailing newline
+    raw = open(path).read()
+    assert raw.endswith("\n")
+    assert json.loads(raw)["schema_version"] == BENCH_SCHEMA_VERSION
+
+
+def test_load_snapshot_rejects_schema_mismatch(tmp_path):
+    snap = snapshot("serve", {"metrics": {"x": 1.0}})
+    path = write_snapshot(snap, str(tmp_path))
+    d = json.load(open(path))
+    d["schema_version"] = BENCH_SCHEMA_VERSION + 1
+    json.dump(d, open(path, "w"))
+    with pytest.raises(ValueError, match="schema"):
+        load_snapshot(path)
+
+
+# ---------------------------------------------------------------------------
+# Direction-aware comparison
+# ---------------------------------------------------------------------------
+
+def test_metric_direction_suffix_convention():
+    assert metric_direction("total_cycles") == "lower"
+    assert metric_direction("vilbert_tile_hbm_bytes") == "lower"
+    assert metric_direction("tokens_per_kcycle") == "higher"
+    assert metric_direction("requests_per_kcycle") == "higher"
+    assert metric_direction("vilbert_tile_8c_speedup") == "higher"
+    assert metric_direction("mesh_link_util") == "higher"
+
+
+def test_compare_lower_better_band():
+    base = _snap({"cycles": 1000.0})
+    assert compare(_snap({"cycles": 1000.0}), base).ok
+    assert compare(_snap({"cycles": 1019.0}), base).ok        # inside 2%
+    bad = compare(_snap({"cycles": 1021.0}), base)
+    assert not bad.ok
+    assert [d.name for d in bad.regressions] == ["cycles"]
+    good = compare(_snap({"cycles": 900.0}), base)
+    assert good.ok and [d.name for d in good.improvements] == ["cycles"]
+
+
+def test_compare_higher_better_band():
+    base = _snap({"tokens_per_kcycle": 10.0})
+    assert compare(_snap({"tokens_per_kcycle": 9.81}), base).ok
+    assert not compare(_snap({"tokens_per_kcycle": 9.79}), base).ok
+    assert compare(_snap({"tokens_per_kcycle": 12.0}), base).ok
+
+
+def test_compare_zero_baseline_exact():
+    base = _snap({"dropped": 0.0})
+    assert compare(_snap({"dropped": 0.0}), base).ok
+    assert not compare(_snap({"dropped": 1.0}), base).ok
+
+
+def test_compare_missing_metric_fails_new_metric_passes():
+    base = _snap({"a": 1.0, "b": 2.0})
+    cur = _snap({"a": 1.0, "c": 3.0})
+    cmp = compare(cur, base)
+    assert not cmp.ok                      # 'b' silently vanished -> fail
+    assert list(cmp.missing) == ["b"]
+    assert list(cmp.new) == ["c"]
+    assert "b" in cmp.format()
+
+
+def test_compare_per_metric_tolerance_override():
+    base = _snap({"cycles": 1000.0})
+    cur = _snap({"cycles": 1100.0})
+    assert not compare(cur, base).ok
+    assert compare(cur, base, tolerances={"cycles": 0.15}).ok
+
+
+# ---------------------------------------------------------------------------
+# The injected-regression drill against the committed baselines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("section", ["bench_sim", "serve", "shard"])
+def test_committed_baseline_loads_and_selfcompares(section):
+    path = baseline_path(BASELINES, section)
+    assert os.path.exists(path), f"missing committed baseline {path}"
+    base = load_snapshot(path)
+    assert base.metrics, section
+    assert base.critical_path["makespan"] > 0
+    assert base.critical_path["path_events"] > 0
+    # identity compare: a run identical to the baseline passes the gate
+    assert compare(base, base).ok
+
+
+def test_injected_regression_trips_gate_against_committed_baseline():
+    """Perturb one committed metric by 10% in the losing direction and
+    assert compare() fails — the exact code path ``make bench-check``
+    exercises in CI."""
+    base = load_snapshot(baseline_path(BASELINES, "bench_sim"))
+    cur = copy.deepcopy(base)
+    name, val = next((k, v) for k, v in sorted(cur.metrics.items())
+                     if metric_direction(k) == "lower" and v > 0)
+    cur.metrics[name] = val * 1.10
+    cmp = compare(cur, base)
+    assert not cmp.ok
+    assert any(d.name == name for d in cmp.regressions)
+    assert name in cmp.format()
+
+
+def test_injected_throughput_regression_trips_gate():
+    base = load_snapshot(baseline_path(BASELINES, "serve"))
+    cur = copy.deepcopy(base)
+    assert metric_direction("tokens_per_kcycle") == "higher"
+    cur.metrics["tokens_per_kcycle"] *= 0.90
+    assert not compare(cur, base).ok
