@@ -114,6 +114,70 @@ def run() -> List[str]:
         raise RuntimeError(
             f"engine/simulator timeline mismatch: engine {stats}, "
             f"sim steps {sim.num_steps} decode {sim.decode_steps}")
+
+    # 64-concurrent-slot batched decode (DESIGN.md §15): equal-shape
+    # requests form one shape bucket, so the batched path issues a single
+    # decode_step per step where the per-slot baseline issues 64.
+    n64, plen64, new64 = 64, 8, 9
+
+    def _trace64():
+        rng64 = np.random.default_rng(7)
+        from repro.serve.engine import Request
+        return [Request(rid=1000 + i,
+                        prompt=rng64.integers(
+                            0, cfg.vocab_size,
+                            size=(plen64,)).astype(np.int32),
+                        max_new_tokens=new64, arrival_step=0)
+                for i in range(n64)]
+
+    def _timed64(batch_decode, repeats=3):
+        # Best-of-N: min wall time per path, so a single scheduler hiccup
+        # on a shared host cannot flip the batched-vs-per-slot comparison.
+        # The *gated* number is decode-phase throughput (decode_wall_s):
+        # batching cuts per-token dispatch, while prefill cost — identical
+        # on both paths — dominates this short-generation trace's
+        # end-to-end wall and would drown the signal in host noise.
+        e = Engine(cfg, params, slots=n64, max_len=32,
+                   batch_decode=batch_decode)
+        for r in _trace64():
+            e.submit(r)
+        e.run()                              # warm-up (jit compiles)
+        best = best_dec = float("inf")
+        for _ in range(repeats):
+            for r in _trace64():
+                e.submit(r)
+            t0 = time.perf_counter()
+            d = e.run()
+            best = min(best, time.perf_counter() - t0)
+            best_dec = min(best_dec, e.decode_wall_s())
+        return (e, sum(len(r.out_tokens) for r in d) / best,
+                e.decode_calls / best_dec)
+
+    eng64, tok_s_batched, dec_s_batched = _timed64(True)
+    _, tok_s_perslot, dec_s_perslot = _timed64(False)
+    if dec_s_batched <= dec_s_perslot:
+        raise RuntimeError(
+            f"batched decode ({dec_s_batched:.1f} decode tok/s) failed "
+            f"to beat the per-slot baseline ({dec_s_perslot:.1f} decode "
+            f"tok/s) at {n64} slots")
+    sim64 = simulate_serve(
+        cfg, [ServeRequest(1000 + i, plen64, new64, 0)
+              for i in range(n64)],
+        slots=n64, decode_lowering="coarse")
+    assert_serve_parity(eng64.stats(), sim64.metrics)
+    total64 = n64 * new64
+    dispatch_speedup = (eng64.decode_calls
+                        / max(eng64.decode_batches, 1))
+    rows.append(csv_row(
+        "serve64_batched_tokens_per_s", 1e6 / max(tok_s_batched, 1e-9),
+        f"decode phase {dec_s_batched:.0f} tok/s batched vs "
+        f"{dec_s_perslot:.0f} per-slot "
+        f"({dec_s_batched / dec_s_perslot:.1f}x); end-to-end "
+        f"{tok_s_batched:.1f} vs {tok_s_perslot:.1f} tok/s at {n64} "
+        f"slots; {eng64.decode_batches} decode_step calls for "
+        f"{eng64.decode_calls} token advances "
+        f"({dispatch_speedup:.0f}x dispatch)"))
+
     # Perf-tracking snapshot (DESIGN.md §14): simulation-domain only —
     # wall-clock req/s stays out of the gating metrics (info block).
     log_bench(
@@ -124,10 +188,18 @@ def run() -> List[str]:
          "decode_calls": stats["decode_calls"],
          "tokens_per_kcycle": 1000.0 * total_new / max(sim.cycles, 1),
          "requests_per_kcycle": sim.requests_per_kilocycle(),
-         "ttft_p95_cycles": sim.cycle_metrics["ttft"]["p95"]},
+         "ttft_p95_cycles": sim.cycle_metrics["ttft"]["p95"],
+         "serve64_tokens_per_kcycle":
+             1000.0 * total64 / max(sim64.cycles, 1),
+         "serve64_dispatch_speedup": dispatch_speedup},
         trace=sim.result.trace,
         info={"model": cfg.name, "slots": SLOTS,
-              "wall_tokens_per_s": total_new / wall})
+              "wall_tokens_per_s": total_new / wall,
+              "serve64_slots": n64,
+              "serve64_wall_tokens_per_s_batched": tok_s_batched,
+              "serve64_wall_tokens_per_s_perslot": tok_s_perslot,
+              "serve64_decode_tokens_per_s_batched": dec_s_batched,
+              "serve64_decode_tokens_per_s_perslot": dec_s_perslot})
 
     dsteps = [s for s in sim.steps if s.decoded]
     if dsteps:

@@ -94,6 +94,71 @@ def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.astype(q.dtype)
 
 
+def decode_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len, *, window: int = 0,
+                         block_k: int = 512,
+                         unroll: bool = False) -> jax.Array:
+    """Batched single-query decode attention over cached K/V — the
+    lowerable mirror of ``kernels.decode_attention`` (and a blocked
+    restatement of ``ref.ref_decode_attention``).
+
+    q: (B, Hq, 1, hd); k/v: (B, Hkv, W, hd); ``cache_len``: () or (B,)
+    int32 valid cache entries per row (the new token's K/V already
+    written).  Online-softmax over KV blocks, ragged rows masked by
+    their own length — peak memory O(B·block_k) per head.
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, W = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    bk = min(block_k, W)
+    nkb = _block_count(W, bk)
+    pad = nkb * bk - W
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd) * scale
+    kbs = jnp.moveaxis(k.reshape(B, Hkv, nkb, bk, hd).astype(jnp.float32),
+                       2, 0)
+    vbs = jnp.moveaxis(v.reshape(B, Hkv, nkb, bk, hd).astype(jnp.float32),
+                       2, 0)
+
+    def block(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = inp                      # k_j: (B,Hkv,bk,hd)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_j)
+        kpos = j * bk + jnp.arange(bk)
+        mask = kpos[None, :] < clen[:, None]   # (B, bk): ragged + seq pad
+        if window > 0:
+            mask = mask & (kpos[None, :] > clen[:, None] - 1 - window)
+        s = jnp.where(mask[:, None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    js = jnp.arange(nkb)
+    if unroll:
+        carry = (m0, l0, a0)
+        for j in range(nkb):
+            carry, _ = block(carry, (jnp.asarray(j), kbs[j], vbs[j]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), (js, kbs, vbs))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, Sq, hd)
+    return out.astype(q.dtype)
+
+
 def stream_attention_jnp(q: jax.Array, x_kv: jax.Array, wk: jax.Array,
                          wv: jax.Array, *, sin=None, cos=None,
                          k_gamma=None, causal: bool = False,

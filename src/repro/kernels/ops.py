@@ -308,6 +308,61 @@ def decode_attention_by_plan(decode_layer_plan, q: jax.Array, k: jax.Array,
         block_q=Sq, block_kv=bk, hbm_bytes=nbytes, flops=flops)
 
 
+def batched_decode_attention_by_plan(decode_layer_plan, q: jax.Array,
+                                     k: jax.Array, v: jax.Array,
+                                     cache_len, *,
+                                     window: int = 0,
+                                     use_pallas: bool = False) -> jax.Array:
+    """Execute one decode-step attention layer for a *bucket* of slots at
+    once (DESIGN.md §15): q (B, Hq, 1, hd) carries one query row per
+    slot, k/v (B, Hkv, W, hd) are the slots' gathered cache buffers, and
+    ``cache_len`` (() or (B,)) the per-row valid entry count — the
+    batched counterpart of ``decode_attention_by_plan``, row-for-row
+    identical numerics (each row's online softmax never sees its
+    neighbours).
+
+    Dispatches to ``kernels.decode_attention`` (the batched Pallas
+    kernel) under ``use_pallas``, else the lowerable
+    ``jnp_blocked.decode_attention_jnp`` reference.  Record/replay: same
+    ``KernelTrace`` contract as the per-slot entry — kind ``"decode"``,
+    predicted bytes summed over the plan's per-slot ``seq_kv`` (NOT
+    B x the buffer width: the traffic model charges what each slot
+    *attends*, which the plan already clamped/pruned per slot)."""
+    def call():
+        if use_pallas:
+            from repro.kernels.decode_attention import decode_attention
+            return decode_attention(
+                q, k, v, cache_len, window=window,
+                block_k=decode_layer_plan.block_kv,
+                interpret=not _on_tpu())
+        return JB.decode_attention_jnp(
+            q, k, v, cache_len, window=window,
+            block_k=runtime.get("block_k", decode_layer_plan.block_kv),
+            unroll=runtime.get("unroll", False))
+    rec = _replay_recorder(q, k, v)
+    if rec is None:
+        return call()
+    from repro.plan.heuristics import decode_attn_hbm_bytes
+    B, Hq, Sq, hd = q.shape
+    Hkv, W = k.shape[1], k.shape[2]
+    bk = _pick_block(W, decode_layer_plan.block_kv)
+    seq_kv = decode_layer_plan.seq_kv
+    if len(seq_kv) != B:
+        raise ValueError(
+            f"bucket batch {B} != plan slots {len(seq_kv)} for "
+            f"{decode_layer_plan.name}")
+    nbytes = sum(decode_attn_hbm_bytes(
+        kv, Hq, Hkv, hd, decode_layer_plan.mode,
+        append=not decode_layer_plan.cross,
+        bytes_per_el=q.dtype.itemsize) for kv in seq_kv)
+    flops = sum(4 * Hq * Sq * kv * hd for kv in seq_kv)
+    return rec.measure(
+        call, op=decode_layer_plan.name, kind="decode",
+        mode=decode_layer_plan.mode.value,
+        grid=(B, 1, -(-W // bk)),
+        block_q=Sq, block_kv=bk, hbm_bytes=nbytes, flops=flops)
+
+
 def attention_by_mode(mode: ExecutionMode, q: jax.Array, x_kv: jax.Array,
                       wk: jax.Array, wv: jax.Array, *,
                       sin: Optional[jax.Array] = None,

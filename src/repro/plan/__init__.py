@@ -35,12 +35,13 @@ __all__ = [
     "plan_model", "plan_attention", "resolve_hw",
     "DecodePlan", "DecodeLayerPlan", "DECODE_PLAN_VERSION",
     "plan_decode_step",
+    "plan_decode_buckets",
 ]
 
 _PLANNER_NAMES = {"ExecutionPlan", "LayerPlan", "GemmPlan", "PLAN_VERSION",
                   "plan_model", "plan_attention", "resolve_hw"}
 _DECODE_NAMES = {"DecodePlan", "DecodeLayerPlan", "DECODE_PLAN_VERSION",
-                 "plan_decode_step"}
+                 "plan_decode_step", "plan_decode_buckets"}
 
 
 def __getattr__(name):

@@ -383,3 +383,43 @@ def plan_decode_step(cfg: ModelConfig,
                       hw_params=dataclasses.asdict(hw_cfg),
                       context=ctxs, layers=tuple(layers),
                       gemms=tuple(gemms))
+
+
+def plan_decode_buckets(cfg: ModelConfig,
+                        context: Sequence[int], *,
+                        hw: Union[str, HardwareConfig, None] = None,
+                        mode: Optional[ExecutionMode] = None,
+                        force_mode: bool = False,
+                        block_kv: int = DEFAULT_BLOCK
+                        ) -> List[Tuple[Tuple[int, ...], DecodePlan]]:
+    """Plan one decode step as per-shape-bucket ``DecodePlan``s.
+
+    Slots with equal KV length share cache shape and position counter, so
+    the batched engine advances each such *bucket* with one
+    ``decode_step`` call.  Returns ``[(slot_positions, plan), ...]`` —
+    positions index into ``context``, buckets appear in order of their
+    first member — where each ``plan`` is ``plan_decode_step`` of that
+    bucket's (uniform) context.
+
+    Per-layer attention bytes/cycles and GEMM shapes are per-slot
+    additive (the planner never couples slots), so bucket plans are exact
+    slices of the whole-step plan: summed over buckets they reproduce
+    ``plan_decode_step(cfg, context, ...)``'s ``total_hbm_bytes`` —
+    ``sim.simulate_serve`` keeps cross-asserting the whole-step number,
+    coarse lowering accounts it bucket-by-bucket.
+    """
+    ctxs = tuple(context)
+    if not ctxs:
+        raise ValueError("context must name at least one active slot")
+    order: List[int] = []
+    members: Dict[int, List[int]] = {}
+    for i, c in enumerate(ctxs):
+        c = int(c)
+        if c not in members:
+            members[c] = []
+            order.append(c)
+        members[c].append(i)
+    return [(tuple(members[c]),
+             plan_decode_step(cfg, (c,) * len(members[c]), hw=hw, mode=mode,
+                              force_mode=force_mode, block_kv=block_kv))
+            for c in order]

@@ -10,6 +10,18 @@ planner-resolved ``ExecutionPlan`` (per-layer modes dispatched through
 slot the moment its request's token budget is spent — a short request
 never pads out to a long neighbour's length.
 
+Decode is *batched* (DESIGN.md §15): active slots' caches live in a
+paged K/V pool (``repro.serve.kv_cache.PagedKVCache``), and each step
+the engine groups slots into shape buckets (equal KV length ⇒ equal
+cache shape and position counter), gathers each bucket into one packed
+cache and advances it with a single ``decode_step`` call —
+``decode_batches`` counts those calls while ``decode_calls`` keeps
+counting per-slot token advances, so ``decode_calls /
+decode_batches`` is the dispatch amplification the batching removes.
+Cache trees the pool cannot page (SSM / hybrid / MLA / enc-dec state,
+or mesh-sharded serving) transparently fall back to the per-slot B=1
+path with identical semantics.
+
 The step timeline is the *shared* deterministic schedule
 (``repro.serve.schedule.build_schedule``), the same object
 ``repro.sim.simulate_serve`` lowers through the cycle-approximate
@@ -41,6 +53,7 @@ from repro.core.types import ExecutionMode, ModelConfig
 from repro.obs.metrics import (METRICS_SCHEMA_VERSION, MetricsRegistry,
                                RequestSpan, observe_spans, spans_from_steps,
                                spans_from_timeline, summarize_spans)
+from repro.serve.kv_cache import PagedKVCache, shape_buckets
 from repro.serve.schedule import Schedule, ServeRequest, build_schedule
 
 
@@ -63,6 +76,9 @@ class StepRecord:
     decoded: Tuple[int, ...]             # rids advanced one token
     kv_lens: Tuple[int, ...]             # per decoded slot: attended KV len
     decode_plan: Optional[object] = None  # the step's DecodePlan (or None)
+    # Shape buckets the step's decode actually dispatched: (kv_len, rids)
+    # per batched decode_step call; None on the per-slot fallback path.
+    buckets: Optional[Tuple[Tuple[int, Tuple[int, ...]], ...]] = None
 
 
 class _LRU:
@@ -98,7 +114,10 @@ class Engine:
                  plan_cache_size: int = 32,
                  plan_decode: bool = True,
                  mode: Optional[ExecutionMode] = None,
-                 mesh=None):
+                 mesh=None,
+                 batch_decode: bool = True,
+                 page_size: int = 64,
+                 clock=time.perf_counter):
         """``plan``: an ``repro.plan.ExecutionPlan`` to serve under (pins
         every admission); default: re-plan per admitted prompt length from
         a bounded LRU cache.  Prefill plans and per-step ``DecodePlan``s
@@ -110,7 +129,14 @@ class Engine:
         (pre-PR-2 API) — skips the planner entirely.  ``mesh``: a jax
         mesh (``launch.mesh`` builders); prefill/decode then run under
         ``shard_map`` with replicated specs (``repro.shard.serve``,
-        DESIGN.md §13) — numerics identical to the mesh-less path."""
+        DESIGN.md §13) — numerics identical to the mesh-less path.
+        ``batch_decode``: group equal-KV-length slots into one
+        ``decode_step`` call through a paged K/V pool of ``page_size``
+        positions per page (DESIGN.md §15); auto-falls back per slot
+        for cache trees the pool cannot page and under ``mesh``.
+        ``clock``: wall-time source (``time.perf_counter``-compatible)
+        for the ``"wall"`` SLO stats — injectable so tests can pin
+        percentiles deterministically."""
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -134,9 +160,18 @@ class Engine:
         else:
             self._decode = jax.jit(
                 lambda p, c, t: self.mod.decode_step(p, cfg, c, t))
+        # Batched decode: mesh serving keeps per-slot B=1 calls (the
+        # shard_map decode fn is traced for that shape); otherwise the
+        # first admission decides — if its cache tree pages, the run
+        # serves through the pool, else it falls back per slot.
+        self.batch_decode = batch_decode and mesh is None
+        self.page_size = page_size
+        self._pool: Optional[PagedKVCache] = None
+        self._clock = clock
         self._queue: deque = deque()
         self.step_log: List[StepRecord] = []
-        self.decode_calls = 0         # actual decode_step invocations
+        self.decode_calls = 0         # per-slot token advances
+        self.decode_batches = 0       # actual decode_step invocations
         self.last_schedule: Optional[Schedule] = None
         # Observability (DESIGN.md §12): per-run lifecycle bookkeeping.
         self.registry = MetricsRegistry()
@@ -255,49 +290,119 @@ class Engine:
         done: List[Request] = []
         self.step_log = []
         self.decode_calls = 0
+        self.decode_batches = 0
+        self._pool = None
+        batched = self.batch_decode
         self.registry = MetricsRegistry()
         self._arrivals = {r.rid: r.arrival_step for r in reqs}
         self._step_walls = {}
         self._prefill_wall_end = {}
         V = self.cfg.vocab_size
         for st in schedule.steps:
-            wall0 = time.perf_counter()
+            wall0 = self._clock()
             for slot, rid in st.admitted:
                 r = by_rid[rid]
                 last_logits, cache = self._prefill_one(r)
                 tok = jnp.argmax(last_logits[:, :V], axis=-1)[:, None]
                 r.out_tokens.append(int(tok[0, 0]))
                 # Token #1 just materialized: the wall-clock TTFT mark.
-                self._prefill_wall_end[rid] = time.perf_counter()
+                self._prefill_wall_end[rid] = self._clock()
+                if batched and self._pool is None:
+                    # First admission decides for the run: page the pool
+                    # or fall back per slot (SSM/MLA/hybrid/enc-dec
+                    # trees — every later cache shares the config).
+                    if PagedKVCache.supports(cache):
+                        self._pool = PagedKVCache.from_cache(
+                            cache, slots=self.slots,
+                            page_size=self.page_size)
+                    else:
+                        batched = False
+                if self._pool is not None:
+                    self._pool.admit(slot, cache)
+                    cache = None          # the pool owns the K/V now
                 slot_state[slot] = {"req": r, "cache": cache, "tok": tok}
                 rid_slot[rid] = slot
             dp = None
+            step_buckets = None
             if st.decoding:
-                dp = self.decode_plan_for(
-                    tuple(kv for _, _, kv in st.decoding))
-                for slot, rid, _kv in st.decoding:
-                    ss = slot_state[slot]
-                    logits, ss["cache"] = self._decode(
-                        self.params, ss["cache"], ss["tok"])
-                    self.decode_calls += 1
-                    tok = jnp.argmax(logits[:, 0, :V], axis=-1)[:, None]
-                    ss["tok"] = tok
-                    ss["req"].out_tokens.append(int(tok[0, 0]))
+                kv_lens = tuple(kv for _, _, kv in st.decoding)
+                dp = self.decode_plan_for(kv_lens)
+                if self._pool is not None:
+                    step_buckets = self._decode_buckets(st, kv_lens,
+                                                        slot_state, V)
+                else:
+                    for slot, rid, _kv in st.decoding:
+                        ss = slot_state[slot]
+                        logits, ss["cache"] = self._decode(
+                            self.params, ss["cache"], ss["tok"])
+                        self.decode_calls += 1
+                        self.decode_batches += 1
+                        tok = jnp.argmax(logits[:, 0, :V], axis=-1)[:, None]
+                        ss["tok"] = tok
+                        ss["req"].out_tokens.append(int(tok[0, 0]))
             self.step_log.append(StepRecord(
                 step=st.step,
                 admitted=tuple(r for _, r in st.admitted),
                 decoded=tuple(r for _, r, _ in st.decoding),
                 kv_lens=tuple(kv for _, _, kv in st.decoding),
-                decode_plan=dp))
-            self._step_walls[st.step] = (wall0, time.perf_counter())
+                decode_plan=dp,
+                buckets=step_buckets))
+            self._step_walls[st.step] = (wall0, self._clock())
             for rid in st.finished:
                 done.append(by_rid[rid])
-                del slot_state[rid_slot.pop(rid)]       # recycle the slot
+                slot = rid_slot.pop(rid)
+                if self._pool is not None:
+                    self._pool.free(slot)               # recycle the pages
+                del slot_state[slot]                    # recycle the slot
         self.registry.counter("steps").inc(len(self.step_log))
         self.registry.counter("decode_calls").inc(self.decode_calls)
         observe_spans(self.registry, self.request_spans, "steps.")
         observe_spans(self.registry, self.wall_spans, "wall.")
         return done
+
+    def decode_wall_s(self) -> float:
+        """Wall seconds spent in pure-decode steps (steps that also
+        prefilled are excluded, so prefill wall never pollutes the
+        decode-phase number).  The denominator for decode throughput:
+        batching cuts dispatch here, while prefill cost is identical on
+        both paths and dominates short-generation end-to-end walls."""
+        total = 0.0
+        for rec in self.step_log:
+            if rec.decoded and not rec.admitted:
+                bounds = self._step_walls.get(rec.step)
+                if bounds is not None:
+                    total += bounds[1] - bounds[0]
+        return total
+
+    def _decode_buckets(self, st, kv_lens, slot_state, V):
+        """Advance one step's active slots bucket-by-bucket through the
+        paged pool; returns the (kv_len, rids) buckets dispatched."""
+        out = []
+        for kv, positions in shape_buckets(kv_lens):
+            slots = [st.decoding[p][0] for p in positions]
+            rids = tuple(st.decoding[p][1] for p in positions)
+            # Bucket invariant: equal schedule KV length <=> equal cache
+            # position counter (kv counts the token being decoded, the
+            # cache holds everything before it).
+            for s in slots:
+                if self._pool.len_of(s) + 1 != kv:
+                    raise RuntimeError(
+                        f"slot {s}: cache len {self._pool.len_of(s)} "
+                        f"inconsistent with scheduled kv {kv}")
+            cache = self._pool.gather(slots)
+            toks = jnp.concatenate(
+                [slot_state[s]["tok"] for s in slots], axis=0)
+            logits, cache = self._decode(self.params, cache, toks)
+            self._pool.scatter(slots, cache)
+            self.decode_batches += 1
+            self.decode_calls += len(slots)
+            tok = jnp.argmax(logits[:, 0, :V], axis=-1)[:, None]
+            tok_np = np.asarray(tok)
+            for i, s in enumerate(slots):
+                slot_state[s]["tok"] = tok[i:i + 1]
+                slot_state[s]["req"].out_tokens.append(int(tok_np[i, 0]))
+            out.append((kv, rids))
+        return tuple(out)
 
     # ------------------------------------------------------------------
     # Introspection
@@ -365,6 +470,7 @@ class Engine:
             "admit_step": dict(s.admit_step) if s is not None else {},
             "finish_step": dict(s.finish_step) if s is not None else {},
             "decode_calls": self.decode_calls,
+            "decode_batches": self.decode_batches,
             "max_concurrency": max(
                 (len(r.admitted) + len(r.decoded) for r in self.step_log),
                 default=0),

@@ -1,0 +1,274 @@
+"""Paged/packed KV-cache pool for batched decode (DESIGN.md §15).
+
+The engine's per-slot caches are exact but dispatch-wasteful: at 64+
+concurrent slots, 64 B=1 ``decode_step`` calls per step dominate
+tokens/s.  This module gives the engine a *paged* layout so equal-shape
+slots share one call:
+
+* one page pool per cache side (K and V), page-major:
+  ``(num_pages, layers, kv_heads, page_size, head_dim)`` — a page holds
+  ``page_size`` consecutive cache positions of one slot across every
+  layer;
+* a per-slot page table (position-ordered page ids) plus the slot's
+  valid length; pages allocate on demand as the cache grows and return
+  to the free list when the slot recycles;
+* ``gather`` packs a *shape bucket* — slots with equal KV length, found
+  by ``shape_buckets`` — into one batched cache
+  ``{"layers": {"k": (L, B, Hkv, W, hd), ...}, "len": scalar}`` that
+  ``decode_step`` advances in a single call; ``scatter`` writes the
+  updated buffers back through the page tables (allocating the page a
+  growth step crosses into).
+
+Gather→compute→scatter round-trips are value-exact (pages are plain
+slices), so the batched path's numerics reduce to ``decode_step``'s own
+row independence — pinned by the batched-vs-B=1 parity tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def shape_buckets(kv_lens: Sequence[int]
+                  ) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Group slot positions by KV length, order-preserving.
+
+    Returns ``[(kv_len, positions), ...]`` where ``positions`` index into
+    ``kv_lens``; buckets appear in order of their first member, members
+    keep their relative order.  Slots in one bucket share cache shape
+    *and* position counter, so one ``decode_step`` call advances them
+    all.
+    """
+    order: List[int] = []
+    members: Dict[int, List[int]] = {}
+    for i, kv in enumerate(kv_lens):
+        kv = int(kv)
+        if kv < 1:
+            raise ValueError(f"kv_lens must be >= 1, got {kv_lens!r}")
+        if kv not in members:
+            members[kv] = []
+            order.append(kv)
+        members[kv].append(i)
+    return [(kv, tuple(members[kv])) for kv in order]
+
+
+@dataclasses.dataclass
+class _SlotEntry:
+    pages: List[int]          # position-ordered page ids
+    length: int               # valid cache entries (== cache["len"])
+
+
+class PagedKVCache:
+    """Demand-paged K/V pool for one engine's decode slots.
+
+    Built lazily from the first admitted cache (``from_cache``): the pool
+    only supports the plain per-layer ``{"k", "v"}`` cache tree the
+    unified transformer uses — families with richer state (SSM / MLA /
+    hybrid) stay on the engine's per-slot fallback.
+    """
+
+    def __init__(self, *, slots: int, num_layers: int, kv_heads: int,
+                 width: int, head_dim: int, dtype,
+                 page_size: int = 64) -> None:
+        if slots < 1 or width < 1:
+            raise ValueError(f"slots ({slots}) and width ({width}) must "
+                             "be >= 1")
+        self.slots = slots
+        self.num_layers = num_layers
+        self.kv_heads = kv_heads
+        self.width = width                     # per-slot cache positions
+        self.head_dim = head_dim
+        self.page_size = min(int(page_size), width)
+        self.pages_per_slot = -(-width // self.page_size)
+        self.num_pages = slots * self.pages_per_slot
+        shape = (self.num_pages, num_layers, kv_heads, self.page_size,
+                 head_dim)
+        self._k_pool = jnp.zeros(shape, dtype)
+        self._v_pool = jnp.zeros(shape, dtype)
+        self._free: deque = deque(range(self.num_pages))
+        self._table: Dict[int, _SlotEntry] = {}
+
+    # ------------------------------------------------------------------
+    # Construction / introspection
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def supports(cache) -> bool:
+        """True iff ``cache`` is the plain stacked-KV tree this pool
+        pages (``{"layers": {"k", "v"}, "len"}`` with B == 1 leaves)."""
+        try:
+            layers = cache["layers"]
+        except (TypeError, KeyError):
+            return False
+        if not isinstance(layers, dict) or set(layers) != {"k", "v"}:
+            return False
+        k = layers["k"]
+        return getattr(k, "ndim", 0) == 5 and k.shape[1] == 1
+
+    @classmethod
+    def from_cache(cls, cache, *, slots: int,
+                   page_size: int = 64) -> "PagedKVCache":
+        """Size a pool from one admitted B=1 cache's leaf shapes."""
+        k = cache["layers"]["k"]               # (L, 1, Hkv, W, hd)
+        L, _, Hkv, W, hd = k.shape
+        return cls(slots=slots, num_layers=L, kv_heads=Hkv, width=W,
+                   head_dim=hd, dtype=k.dtype, page_size=page_size)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def len_of(self, slot: int) -> int:
+        return self._table[slot].length
+
+    def page_table(self, slot: int) -> Tuple[int, ...]:
+        return tuple(self._table[slot].pages)
+
+    def _occupied(self, length: int) -> int:
+        """Cache positions holding live entries at ``length`` — the ring
+        buffer (sliding-window W < max context) caps at the full width
+        once wrapped."""
+        return min(length, self.width)
+
+    def _pages_for(self, length: int) -> int:
+        return -(-self._occupied(length) // self.page_size) if length else 0
+
+    def _alloc(self, entry: _SlotEntry, length: int) -> None:
+        need = self._pages_for(length)
+        while len(entry.pages) < need:
+            if not self._free:
+                raise RuntimeError("paged KV pool exhausted (page leak?)")
+            entry.pages.append(self._free.popleft())
+
+    # ------------------------------------------------------------------
+    # Slot lifecycle
+    # ------------------------------------------------------------------
+
+    def admit(self, slot: int, cache) -> None:
+        """Page in one freshly prefilled B=1 cache for ``slot``."""
+        if slot in self._table:
+            raise ValueError(f"slot {slot} already admitted")
+        if not self.supports(cache):
+            raise ValueError("cache tree is not the plain {'k','v'} "
+                             "layout this pool pages")
+        entry = _SlotEntry(pages=[], length=int(cache["len"]))
+        self._alloc(entry, entry.length)
+        self._table[slot] = entry
+        if entry.pages:
+            self._write(entry, cache["layers"]["k"][:, 0],
+                        cache["layers"]["v"][:, 0])
+
+    def free(self, slot: int) -> None:
+        """Recycle a finished slot's pages back to the pool."""
+        entry = self._table.pop(slot)
+        self._free.extend(entry.pages)
+
+    # ------------------------------------------------------------------
+    # Bucket gather / scatter
+    # ------------------------------------------------------------------
+
+    def gather(self, slot_ids: Sequence[int]):
+        """Pack one shape bucket into a batched decode cache.
+
+        All slots must hold equal lengths (equal length <=> equal
+        position counter <=> one shared RoPE position — the bucket
+        invariant).  Returns ``{"layers": {"k": (L, B, Hkv, W, hd),
+        "v": ...}, "len": scalar}`` ready for one ``decode_step`` call.
+        """
+        entries = [self._table[s] for s in slot_ids]
+        lens = {e.length for e in entries}
+        if len(lens) != 1:
+            raise ValueError(f"bucket slots {list(slot_ids)} hold unequal "
+                             f"lengths {sorted(lens)}")
+        length = entries[0].length
+        B = len(entries)
+        npg = self._pages_for(length)
+        if npg == 0:
+            k = jnp.zeros((self.num_layers, B, self.kv_heads, self.width,
+                           self.head_dim), self._k_pool.dtype)
+            return {"layers": {"k": k, "v": k},
+                    "len": jnp.asarray(length, jnp.int32)}
+        ids = np.asarray([e.pages[:npg] for e in entries], np.int32)
+
+        def pack(pool):
+            pages = jnp.take(pool, ids.reshape(-1), axis=0)
+            pages = pages.reshape(B, npg, self.num_layers, self.kv_heads,
+                                  self.page_size, self.head_dim)
+            dense = jnp.moveaxis(pages, 1, 3)      # (B, L, Hkv, npg, pg, hd)
+            dense = dense.reshape(B, self.num_layers, self.kv_heads,
+                                  npg * self.page_size, self.head_dim)
+            dense = jnp.moveaxis(dense, 0, 1)      # (L, B, Hkv, S, hd)
+            S = npg * self.page_size
+            if S < self.width:
+                dense = jnp.pad(
+                    dense, ((0, 0), (0, 0), (0, 0),
+                            (0, self.width - S), (0, 0)))
+            return dense[:, :, :, :self.width]
+
+        return {"layers": {"k": pack(self._k_pool),
+                           "v": pack(self._v_pool)},
+                "len": jnp.asarray(length, jnp.int32)}
+
+    def scatter(self, slot_ids: Sequence[int], cache) -> None:
+        """Write one advanced bucket cache back through the page tables,
+        allocating the page each slot's growth step crossed into.
+
+        One ``.at[ids].set`` per pool for the whole bucket (equal lengths
+        => equal page counts) — a per-slot write-back loop would cost as
+        many eager dispatches as the batching saved.
+        """
+        new_len = int(cache["len"])
+        entries = [self._table[s] for s in slot_ids]
+        for e in entries:
+            if new_len < e.length:
+                raise ValueError("scatter would shrink a slot's cache")
+            self._alloc(e, new_len)
+            e.length = new_len
+        npg = self._pages_for(new_len)
+        if npg == 0:
+            return
+        B = len(entries)
+        S = npg * self.page_size
+        ids = np.asarray([e.pages[:npg] for e in entries],
+                         np.int32).reshape(-1)
+
+        def unpack(dense):
+            dense = jnp.moveaxis(dense, 1, 0)  # (B, L, Hkv, W, hd)
+            if S > self.width:
+                dense = jnp.pad(
+                    dense, ((0, 0), (0, 0), (0, 0),
+                            (0, S - self.width), (0, 0)))
+            pages = dense[:, :, :, :S].reshape(
+                B, self.num_layers, self.kv_heads, npg, self.page_size,
+                self.head_dim)
+            pages = jnp.moveaxis(pages, 3, 1)  # (B, npg, L, Hkv, pg, hd)
+            return pages.reshape(B * npg, self.num_layers, self.kv_heads,
+                                 self.page_size, self.head_dim)
+
+        self._k_pool = self._k_pool.at[ids].set(unpack(cache["layers"]["k"]))
+        self._v_pool = self._v_pool.at[ids].set(unpack(cache["layers"]["v"]))
+
+    def _write(self, entry: _SlotEntry, k, v) -> None:
+        """Page out one slot's dense (L, Hkv, W, hd) buffers."""
+        npg = len(entry.pages)
+        if npg == 0:
+            return
+        S = npg * self.page_size
+        if S > self.width:
+            pad = ((0, 0), (0, 0), (0, S - self.width), (0, 0))
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+        ids = np.asarray(entry.pages, np.int32)
+
+        def unpack(dense):
+            pages = dense[:, :, :S].reshape(
+                self.num_layers, self.kv_heads, npg, self.page_size,
+                self.head_dim)
+            return jnp.moveaxis(pages, 2, 0)   # (npg, L, Hkv, pg, hd)
+
+        self._k_pool = self._k_pool.at[ids].set(unpack(k))
+        self._v_pool = self._v_pool.at[ids].set(unpack(v))

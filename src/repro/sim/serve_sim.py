@@ -22,6 +22,18 @@ equal its ``DecodePlan.total_hbm_bytes`` prediction — the planner and the
 simulator implement the same traffic model or the run fails loudly.
 Decode ops carrying recorded ``KernelTrace``s (via ``decode_plans`` /
 ``attach_traces``) replay their measured timing instead and are exempt.
+
+``decode_lowering="coarse"`` (DESIGN.md §15) collapses each step's
+decode sub-graph to one aggregated event per shape bucket instead of
+per-layer tasks, keeping long-context × many-slot sweeps tractable.
+This is *exact*, not approximate: every step ends in a barrier covering
+all its tasks, so a decode sub-graph always starts with every resource
+free — its span is context-independent, and simulating the step's
+``DecodePlan`` once on a scratch engine (same calibration) yields the
+very span the fine lowering would produce in situ.  Spans are memoized
+per KV-length tuple; bytes are re-emitted per bucket (analytic per-slot
+split, recorded-trace remainder on the last bucket) so the per-step
+cross-assert and every byte total stay bit-identical to fine.
 """
 from __future__ import annotations
 
@@ -188,7 +200,8 @@ def simulate_serve(cfg: ModelConfig,
                    plan_fn: Optional[Callable[[int], object]] = None,
                    decode_plan_fn: Optional[
                        Callable[[Tuple[int, ...]], object]] = None,
-                   calibration=None) -> ServeSimResult:
+                   calibration=None,
+                   decode_lowering: str = "fine") -> ServeSimResult:
     """Simulate serving ``requests`` on ``slots`` continuous-batching
     slots.
 
@@ -199,10 +212,20 @@ def simulate_serve(cfg: ModelConfig,
     ``KernelTrace``s attached (decode replay).  ``calibration`` applies
     fitted per-resource cycle scales to the analytic task durations
     (DESIGN.md §10); replayed ops stay verbatim.
+    ``decode_lowering``: ``"fine"`` (default) lowers every decode step's
+    per-layer task graph; ``"coarse"`` emits one aggregated event per
+    shape bucket with a memoized exact span — same cycles, bytes, and
+    metrics, far fewer trace events (see module docstring).
     """
     from repro.plan.decode import plan_decode_step
+    from repro.plan.heuristics import decode_attn_hbm_bytes
     from repro.plan.planner import plan_model, resolve_hw
+    from repro.serve.kv_cache import shape_buckets
     from repro.sim.replay import resolve_calibration
+
+    if decode_lowering not in ("fine", "coarse"):
+        raise ValueError(f"decode_lowering must be 'fine' or 'coarse', "
+                         f"got {decode_lowering!r}")
 
     hw = hw if isinstance(hw, HardwareConfig) else resolve_hw(hw)
     schedule = build_schedule(requests, slots)
@@ -220,6 +243,45 @@ def simulate_serve(cfg: ModelConfig,
 
     prefill_plans: Dict[int, object] = {}
     decode_plans: Dict[Tuple[int, ...], object] = {}
+    # kv-length tuple -> (exact decode span, per-slot analytic bytes over
+    # untraced layers, recorded-trace byte total, replayed-op count),
+    # memoized from one scratch-engine run of the step's DecodePlan.
+    # Bytes are *recomputed* from the plan's shapes — never read off its
+    # hbm_bytes predictions — so the per-step cross-assert below still
+    # catches a plan whose prediction disagrees with the traffic model.
+    coarse_memo: Dict[Tuple[int, ...],
+                      Tuple[int, List[int], int, int]] = {}
+
+    def coarse_spec(kv: Tuple[int, ...], dp) -> Tuple[int, List[int], int,
+                                                      int]:
+        spec = coarse_memo.get(kv)
+        if spec is not None:
+            return spec
+        eng2 = _CalibratedEngine(scale) if scale else Engine()
+        p0 = eng2.barrier([], tag="start")
+        wl2 = decode_workload_from_plan(dp, _DECODE)
+        mode2 = {_DECODE + q.name: q.mode
+                 for q in tuple(dp.layers) + tuple(dp.gemms)}
+        trace2 = {_DECODE + q.name: q.trace
+                  for q in tuple(dp.layers) + tuple(dp.gemms)
+                  if getattr(q, "trace", None) is not None}
+        pend, r2 = _lower(eng2, scheds, wl2, mode2, trace2, p0, decode=True)
+        pend = eng2.barrier([pend], tag="end")
+        eng2.run()
+        span = eng2.finish_times[pend] - eng2.finish_times[p0]
+        per_slot = [sum(decode_attn_hbm_bytes(
+            lp.seq_kv[s], lp.heads, lp.kv_heads, lp.head_dim, lp.mode,
+            append=not lp.cross, bytes_per_el=hw.act_bytes)
+            for lp in dp.layers if lp.trace is None)
+            for s in range(len(kv))]
+        traced = sum(p.trace.hbm_bytes for p in dp.layers
+                     if p.trace is not None)
+        traced += sum(g.trace.hbm_bytes for g in dp.gemms
+                      if g.trace is not None)
+        spec = (span, per_slot, traced, r2)
+        coarse_memo[kv] = spec
+        return spec
+
     prev = eng.barrier([], tag="start")
     marks: List[Tuple[object, int, object]] = []   # (sched step, mark, dp)
     replayed = 0
@@ -246,15 +308,43 @@ def simulate_serve(cfg: ModelConfig,
                 decode_plans[kv] = decode_plan_fn(kv)
             dp = decode_plans[kv]
             prefix = tprefix + _DECODE
-            wl = decode_workload_from_plan(dp, prefix)
-            mode_of = {prefix + q.name: q.mode
-                       for q in tuple(dp.layers) + tuple(dp.gemms)}
-            trace_of = {prefix + q.name: q.trace
-                        for q in tuple(dp.layers) + tuple(dp.gemms)
-                        if getattr(q, "trace", None) is not None}
-            prev, r = _lower(eng, scheds, wl, mode_of, trace_of, prev,
-                             decode=True)
-            replayed += r
+            if decode_lowering == "coarse":
+                span, per_slot, traced, r = coarse_spec(kv, dp)
+                replayed += r
+                buckets = shape_buckets(kv)
+                deps: List[int] = []
+                for i, (_, positions) in enumerate(buckets):
+                    b = sum(per_slot[p] for p in positions)
+                    if i == len(buckets) - 1:
+                        # Recorded-trace bytes land on the last bucket
+                        # (traces are op-level, not per-slot splittable).
+                        b += traced
+                    deps.append(eng.task(
+                        "dma", "HBM", 0, [prev], nbytes=b,
+                        tag=f"{prefix}coarse.b{i}:dma"))
+                exempt_before = getattr(eng, "exempt", None)
+                if exempt_before is not None:
+                    # The memoized span came out of an identically
+                    # calibrated scratch engine — re-scaling it here
+                    # would double-apply the calibration.
+                    eng.exempt = True
+                try:
+                    deps.append(eng.task("compute", "ATTN", span, [prev],
+                                         tag=f"{prefix}coarse:span"))
+                finally:
+                    if exempt_before is not None:
+                        eng.exempt = exempt_before
+                prev = eng.barrier(deps, tag=f"{prefix}coarse:done")
+            else:
+                wl = decode_workload_from_plan(dp, prefix)
+                mode_of = {prefix + q.name: q.mode
+                           for q in tuple(dp.layers) + tuple(dp.gemms)}
+                trace_of = {prefix + q.name: q.trace
+                            for q in tuple(dp.layers) + tuple(dp.gemms)
+                            if getattr(q, "trace", None) is not None}
+                prev, r = _lower(eng, scheds, wl, mode_of, trace_of, prev,
+                                 decode=True)
+                replayed += r
         prev = eng.barrier([prev], tag=f"t{st.step}:end")
         marks.append((st, prev, dp))
 

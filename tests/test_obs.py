@@ -306,12 +306,27 @@ def test_assert_serve_parity_catches_divergence():
         assert_serve_parity({"requests": 1, "tokens": 3}, good)
 
 
+class _FakeClock:
+    """Deterministic ``time.perf_counter`` stand-in: each call advances a
+    fixed tick, so wall-domain percentiles stop depending on host speed
+    (CI boxes were flaking the ``> 0`` assertions on coarse clocks)."""
+
+    def __init__(self, dt: float = 0.125) -> None:
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
 @pytest.mark.parametrize("mode", [None, EM.TILE_STREAM, EM.LAYER_STREAM,
                                   EM.NON_STREAM])
 def test_engine_sim_slo_parity_across_modes(mode):
     params = _params()
     kw = {} if mode is None else {"mode": mode}
-    eng = Engine(SMOKE, params, slots=2, max_len=64, **kw)
+    eng = Engine(SMOKE, params, slots=2, max_len=64, clock=_FakeClock(),
+                 **kw)
     traffic = [(6, 4, 0), (9, 3, 1), (5, 5, 3), (4, 2, 3)]
     for rid, (p, n, a) in enumerate(traffic):
         eng.submit(_req(rid, p, n, a))
@@ -323,10 +338,37 @@ def test_engine_sim_slo_parity_across_modes(mode):
                          slots=2, mode=mode, force_mode=mode is not None)
     assert_serve_parity(stats, res.metrics)
     assert stats["requests"] == len(traffic)
-    # wall-clock spans exist and share the request population
+    # wall-clock spans exist and share the request population; with the
+    # injected clock the strictly-positive TTFT is guaranteed, not a
+    # host-speed accident.
     assert stats["wall"]["requests"] == len(traffic)
     assert stats["wall"]["ttft"]["p50"] > 0
     assert stats["metrics"]["histograms"]["wall.ttft"]["count"] == 4
+
+
+def test_engine_wall_stats_deterministic_under_fake_clock():
+    """Two identical runs under identical fake clocks report *identical*
+    wall summaries — the wall-domain extraction is a pure function of
+    the clock readings, with every lifecycle inequality exact."""
+    traffic = [(6, 4, 0), (9, 3, 1), (5, 5, 3), (4, 2, 3)]
+
+    def run():
+        eng = Engine(SMOKE, _params(), slots=2, max_len=64,
+                     clock=_FakeClock())
+        for rid, (p, n, a) in enumerate(traffic):
+            eng.submit(_req(rid, p, n, a))
+        eng.run()
+        return eng
+
+    w1 = run().stats()["wall"]
+    w2 = run().stats()["wall"]
+    assert w1 == w2
+    assert w1["requests"] == len(traffic)
+    for metric in ("ttft", "tpot", "e2e", "queue_delay"):
+        for q in ("p50", "p95", "p99"):
+            assert w1[metric][q] >= 0.0
+    assert w1["ttft"]["p50"] > 0.0
+    assert w1["e2e"]["p50"] >= w1["ttft"]["p50"]
 
 
 def test_engine_sim_parity_single_request():

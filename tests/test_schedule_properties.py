@@ -1,0 +1,132 @@
+"""Property-based invariants of ``serve.schedule.build_schedule``.
+
+The schedule is the single shared object the live engine executes and
+the simulator lowers (DESIGN.md §11), so its invariants are
+load-bearing for every cross-path agreement test: FIFO admission order,
+immediate slot recycling, no idle-step emission, and the per-request
+decode-step accounting ``decode_steps[rid] == max_new_tokens - 1``
+(hence ``Engine.decode_calls == Σ(max_new − 1)``).
+
+Hypothesis-generated traffic when available; the deterministic grid
+shim (``tests/_hypothesis_fallback``) otherwise.  Requests derive from
+a seeded RNG so both backends explore varied arrival patterns, ragged
+lengths, and oversubscribed slot counts.
+"""
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    sys.path.insert(0, "tests")
+    from _hypothesis_fallback import given, settings, st
+
+from repro.serve.schedule import ServeRequest, build_schedule
+
+
+def _traffic(seed: int, n: int, arrival_spread: int):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i,
+                         prompt_len=int(rng.integers(1, 24)),
+                         max_new_tokens=int(rng.integers(1, 12)),
+                         arrival_step=int(rng.integers(0, arrival_spread)))
+            for i in range(n)]
+
+
+def _check_invariants(reqs, slots):
+    sched = build_schedule(reqs, slots)
+    by_rid = {r.rid: r for r in reqs}
+
+    # Every request is admitted exactly once, decoded to completion, and
+    # finished; nothing is invented.
+    assert set(sched.admit_step) == {r.rid for r in reqs}
+    assert set(sched.finish_step) == {r.rid for r in reqs}
+
+    # decode_calls accounting: each request consumes exactly
+    # max_new_tokens - 1 decode steps (token #1 comes from prefill).
+    for r in reqs:
+        assert sched.decode_steps[r.rid] == r.max_new_tokens - 1
+    total_decoding = sum(len(s.decoding) for s in sched.steps)
+    assert total_decoding == sum(r.max_new_tokens - 1 for r in reqs)
+
+    # FIFO admission: admission order follows (arrival_step, submit
+    # order) — a later-arriving request never overtakes an earlier one.
+    admit_order = []
+    for s in sched.steps:
+        for _, rid in s.admitted:
+            admit_order.append(rid)
+    keys = [(by_rid[rid].arrival_step, admit_order.index(rid))
+            for rid in admit_order]
+    fifo = sorted(admit_order,
+                  key=lambda rid: (by_rid[rid].arrival_step,
+                                   [r.rid for r in reqs].index(rid)))
+    assert admit_order == fifo
+
+    # No idle steps: every emitted step does work.
+    for s in sched.steps:
+        assert s.admitted or s.decoding or s.finished
+
+    # Slot discipline: at most ``slots`` concurrently occupied, each
+    # slot holds one request at a time, and a freed slot is reusable on
+    # the very next admission opportunity (immediate recycling).
+    occupant = {}
+    for s in sched.steps:
+        for slot, rid in s.admitted:
+            assert slot not in occupant, (
+                f"step {s.step}: slot {slot} admitted {rid} while "
+                f"occupied by {occupant[slot]}")
+            occupant[slot] = rid
+        assert len(occupant) <= slots
+        for slot, rid, kv in s.decoding:
+            assert occupant[slot] == rid
+            # kv grows by one per decode step from prompt_len + 1.
+            assert kv >= by_rid[rid].prompt_len + 1
+        for rid in s.finished:
+            freed = [sl for sl, r in occupant.items() if r == rid]
+            assert len(freed) == 1
+            del occupant[freed[0]]
+    assert not occupant                     # everything drained
+
+    # Immediate recycling, globally: with queued work remaining, no step
+    # leaves a free slot unused while an already-arrived request waits.
+    admit_step = sched.admit_step
+    for s in sched.steps:
+        active = sum(1 for r in reqs
+                     if admit_step[r.rid] <= s.step
+                     and sched.finish_step[r.rid] >= s.step)
+        waiting = [r for r in reqs if r.arrival_step <= s.step
+                   and admit_step[r.rid] > s.step]
+        if waiting:
+            assert active >= slots, (
+                f"step {s.step}: {len(waiting)} arrived requests wait "
+                f"while only {active}/{slots} slots are busy")
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=24),
+       slots=st.integers(min_value=1, max_value=8),
+       arrival_spread=st.integers(min_value=1, max_value=20))
+def test_schedule_invariants(seed, n, slots, arrival_spread):
+    _check_invariants(_traffic(seed, n, arrival_spread), slots)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=500),
+       slots=st.integers(min_value=1, max_value=4))
+@pytest.mark.slow
+def test_schedule_invariants_oversubscribed(seed, slots):
+    """Heavy oversubscription (many more requests than slots) keeps the
+    invariants — the regime the batched engine cares about."""
+    _check_invariants(_traffic(seed, 64, 6), slots)
+
+
+def test_schedule_single_request_min():
+    """max_new_tokens == 1 requests take zero decode steps and recycle
+    their slot in the admission step."""
+    sched = build_schedule([ServeRequest(0, 3, 1, 0)], 2)
+    assert sched.decode_steps[0] == 0
+    assert sched.admit_step[0] == sched.finish_step[0] == 0
+    assert len(sched.steps) == 1
