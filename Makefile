@@ -2,11 +2,16 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test bench bench-sim bench-sim-json dse dse-smoke \
-	replay-smoke serve-smoke obs-smoke shard-smoke \
+	search-smoke replay-smoke serve-smoke obs-smoke shard-smoke \
 	bench-baseline bench-check
 
 # Sections that register perf-tracking snapshots (benchmarks/history.py).
-BENCH_SECTIONS := bench_sim serve shard
+BENCH_SECTIONS := bench_sim serve shard dse
+
+# The dse section's budget/width for the bench-baseline/bench-check
+# lane: deterministic metrics (num_rows, frontier_size) depend on the
+# budget, so baseline and check MUST use the same flags.
+BENCH_DSE_FLAGS := --points 12 --workers 2
 
 # Tier-1 verification (ROADMAP.md).
 verify:
@@ -26,10 +31,20 @@ bench-sim-json:
 
 # Design-space exploration (DESIGN.md §9): full grid / CI-budgeted smoke.
 dse:
-	$(PYTHON) benchmarks/run.py dse --json dse_sweep.json
+	$(PYTHON) benchmarks/run.py dse --json dse_sweep.json --workers 4 \
+		--cache .simcache
 
 dse-smoke:
 	$(PYTHON) benchmarks/run.py dse --json dse_sweep.json --points 4
+
+# Successive-halving frontier search smoke (DESIGN.md §16): budgeted
+# search through the benchmark harness (artifact: survivors' sweep +
+# per-rung elimination ledger), then the cache/search invariants —
+# warm-vs-cold timing, search-vs-grid frontier equality — in-process.
+search-smoke:
+	$(PYTHON) benchmarks/run.py dse --search --points 16 --workers 2 \
+		--json search_report.json
+	$(PYTHON) benchmarks/search_smoke.py search_report.json
 
 # Plan/trace replay smoke (DESIGN.md §10): record a tiny trace on CPU,
 # replay it through the simulator, emit the CalibrationReport artifact.
@@ -78,9 +93,9 @@ shard-smoke:
 # BENCH_<section>.json baselines / compare against them (the CI gate —
 # exits 1 on any out-of-band regression).
 bench-baseline:
-	$(PYTHON) benchmarks/run.py $(BENCH_SECTIONS) \
+	$(PYTHON) benchmarks/run.py $(BENCH_SECTIONS) $(BENCH_DSE_FLAGS) \
 		--baseline benchmarks/baselines
 
 bench-check:
-	$(PYTHON) benchmarks/run.py $(BENCH_SECTIONS) \
+	$(PYTHON) benchmarks/run.py $(BENCH_SECTIONS) $(BENCH_DSE_FLAGS) \
 		--json bench_check.json --check-baseline benchmarks/baselines

@@ -20,27 +20,73 @@ if __name__ == "__main__":      # allow ``python benchmarks/bench_dse.py``
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path[:0] = [_root, os.path.join(_root, "src")]
 
-from benchmarks.common import csv_row, log_dse, log_timeline
+from benchmarks.common import (csv_row, log_bench, log_dse, log_search,
+                               log_timeline)
 
 
-def run(points: Optional[int] = None) -> List[str]:
+def run(points: Optional[int] = None, workers: Optional[int] = None,
+        search: bool = False, cache: Optional[str] = None) -> List[str]:
+    import time
+
     from repro.configs.registry import ENERGY_CONFIGS
     from repro.dse import run_sweep
-    # The ROADMAP's joint sweep: every energy preset folds over every
-    # simulated design point (the simulation runs once per point — the
-    # energy axis is a re-fold, so 3x the rows, not 3x the runtime).
-    result = run_sweep(points=points,
-                       energy_models=list(ENERGY_CONFIGS.values()))
+    ems = list(ENERGY_CONFIGS.values())
+    rows: List[str] = []
+    t0 = time.perf_counter()
+    search_result = None
+    if search:
+        # Successive-halving frontier search (DESIGN.md §16): cheap
+        # low-seq rungs rank the grid, survivors graduate to the same
+        # full-fidelity rows the exhaustive sweep would emit.
+        from repro.dse import successive_halving
+        search_result = successive_halving(
+            num_candidates=points, energy_models=ems,
+            cache=cache, workers=workers)
+        result = search_result.sweep
+        log_search(search_result)
+    else:
+        # The ROADMAP's joint sweep: every energy preset folds over every
+        # simulated design point (the simulation runs once per point —
+        # the energy axis is a re-fold, so 3x the rows, not 3x the
+        # runtime).
+        result = run_sweep(points=points, energy_models=ems,
+                           workers=workers, cache=cache)
+    elapsed = time.perf_counter() - t0
     log_dse(result)
 
-    rows: List[str] = []
     base_em = result.energy_model
+    n_points = len(result.rows) // max(len(result.energy_models()), 1)
     rows.append(csv_row(
-        "dse_grid", 0.0,
+        "dse_grid", elapsed * 1e6,
         f"{len(result.rows)} rows ({len(result.models())} models x "
         f"{len(result.energy_models())} energy tables); "
         f"{len(result.skipped)} invalid combos skipped; "
         f"base energy model {base_em}"))
+    if search_result is not None:
+        rungs = " -> ".join(str(len(r.candidates))
+                            for r in search_result.rungs)
+        rows.append(csv_row(
+            "dse_search", 0.0,
+            f"successive halving over {search_result.space_size} "
+            f"candidates (eta {search_result.eta}): {rungs}; "
+            f"{search_result.proxy_sims} proxy + "
+            f"{search_result.full_sims} full sims"))
+    if result.cache_stats:
+        cs = result.cache_stats
+        rows.append(csv_row(
+            "dse_cache", 0.0,
+            f"{cs.get('hits', 0)} hits / {cs.get('misses', 0)} misses "
+            f"({cs.get('disk_hits', 0)} from disk)"))
+    # Harness throughput (gated with the wide wall-clock band — see
+    # benchmarks.history): full-fidelity points swept per minute.
+    log_bench("dse", {
+        "dse_points_per_min": (n_points / (elapsed / 60.0)
+                               if elapsed else 0.0),
+        "num_rows": float(len(result.rows)),
+        "frontier_size": float(len(result.pareto(energy_model=base_em))),
+    }, info={"points": n_points, "elapsed_s": elapsed,
+             "workers": workers or 1, "search": bool(search),
+             "cache_stats": dict(result.cache_stats)})
     knees = result.knees()
     for model, seq_len in result.groups():
         label = result.label(model, seq_len, energy_model=base_em)

@@ -131,8 +131,28 @@ def run() -> List[str]:
         "sim_plan_crosscheck", 0.0,
         f"{total_checks} per-op plan-vs-sim DMA-byte checks passed"))
 
+    # --- DES throughput microbench (DESIGN.md §16) ---
+    # Events scheduled per wall-second on a fresh full simulation of the
+    # first arch's tile plan: the one gated wall-clock metric (wide
+    # tolerance band in benchmarks.history) guarding the Engine.run /
+    # Trace hot path against order-of-magnitude collapses.
+    import time
+    micro_plan = plan_model(registry.get_config(registry.SIM_ARCHS[0]),
+                            hw=hw, mode=ExecutionMode.TILE_STREAM,
+                            force_mode=True)
+    t0 = time.perf_counter()
+    micro = simulate_plan(micro_plan)
+    des_elapsed = time.perf_counter() - t0
+    n_events = len(micro.trace.events)
+    events_per_sec = n_events / des_elapsed if des_elapsed else 0.0
+    rows.append(csv_row(
+        "sim_des_throughput", des_elapsed * 1e6,
+        f"{n_events} events in {des_elapsed * 1e3:.0f}ms = "
+        f"{events_per_sec:,.0f} events/sec"))
+
     # Perf-tracking snapshot (DESIGN.md §14): deterministic simulation
     # metrics + the causal critical path of the first arch's tile trace.
+    bench_metrics["sim_events_per_sec"] = events_per_sec
     bench_metrics["geomean_vs_non_speedup"] = geomean(non_speedups)
     bench_metrics["geomean_vs_layer_speedup"] = geomean(layer_speedups)
     log_bench("bench_sim", bench_metrics, trace=bench_trace,

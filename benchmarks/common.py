@@ -70,6 +70,12 @@ SERVE_LOG: list = []
 # (DESIGN.md §13).
 SHARD_LOG: list = []
 
+# The dse section registers its ``repro.dse.search.SearchResult`` here
+# (when run with --search) so ``run.py --json`` can emit the search
+# artifact — the survivors' sweep plus the per-rung elimination ledger —
+# that the CI search-smoke step uploads (DESIGN.md §16).
+SEARCH_LOG: list = []
+
 # Sections register (name, thunk) pairs producing Perfetto timeline
 # documents (``repro.obs.timeline``); ``run.py --perfetto DIR`` renders
 # them.  Thunks, not documents: sections stay cheap when nobody asked
@@ -87,7 +93,12 @@ BENCH_LOG: dict = {}
 #: v2: reports gained the ``shard`` scale-out block (DESIGN.md §13).
 #: v3: reports gained the ``bench`` snapshot block + SweepRow.headroom
 #: (DESIGN.md §14).
-REPORT_SCHEMA_VERSION = 3
+#: v4: dse rows intern their plan JSON (``plan_ref`` into the sweep's
+#: ``plan_table`` side table, rehydrated by
+#: ``repro.dse.resolve_plan_json``), sweeps carry ``cache_stats``, and
+#: reports may carry a ``search`` block (successive-halving ledger) and
+#: a ``dse`` bench section (DESIGN.md §16).
+REPORT_SCHEMA_VERSION = 4
 
 
 def log_plan(plan) -> None:
@@ -98,6 +109,12 @@ def log_plan(plan) -> None:
 def log_dse(result) -> None:
     """Register a ``repro.dse.SweepResult`` for the --json report."""
     DSE_LOG.append(result)
+
+
+def log_search(result) -> None:
+    """Register a ``repro.dse.search.SearchResult`` for the --json
+    report (the dse section under ``--search``)."""
+    SEARCH_LOG.append(result)
 
 
 def log_replay(traced_plan, report) -> None:
@@ -120,11 +137,14 @@ def log_bench(section: str, metrics: dict, *, trace=None,
     """Register a section's perf-tracking metrics for the bench-history
     snapshot path (``run.py --baseline`` / ``--check-baseline``).
 
-    ``metrics`` must be deterministic simulation-domain scalars (cycles,
-    bytes, tokens-per-kilocycle, speedups) — never wall-clock — so
-    baselines compare across machines.  ``trace`` (optional) attaches a
-    causal critical-path summary (``repro.obs.critpath``); ``info``
-    carries non-gating context (never compared)."""
+    ``metrics`` should be deterministic simulation-domain scalars
+    (cycles, bytes, tokens-per-kilocycle, speedups) so baselines compare
+    across machines; the one sanctioned wall-clock family is harness
+    throughput named ``*_per_sec`` / ``*_per_min``, which
+    ``benchmarks.history`` gates with a much wider tolerance band.
+    ``trace`` (optional) attaches a causal critical-path summary
+    (``repro.obs.critpath``); ``info`` carries non-gating context (never
+    compared)."""
     entry = {"metrics": dict(metrics), "info": dict(info or {})}
     if trace is not None:
         from repro.obs.critpath import critical_path
@@ -143,6 +163,7 @@ def log_timeline(name: str, thunk: Callable[[], dict]) -> None:
 def reset_plan_log() -> None:
     PLAN_LOG.clear()
     DSE_LOG.clear()
+    SEARCH_LOG.clear()
     REPLAY_LOG.clear()
     SERVE_LOG.clear()
     SHARD_LOG.clear()

@@ -29,7 +29,7 @@ for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
-def _sections(points=None):
+def _sections(points=None, workers=None, search=False, cache=None):
     import functools
 
     from benchmarks import (bench_decode, bench_dse, bench_kernels,
@@ -46,7 +46,8 @@ def _sections(points=None):
         ("bench_sim", "StreamDCIM simulator (three-way + SI stall)",
          bench_sim.run),
         ("dse", "Design-space exploration (energy/latency Pareto + knee)",
-         functools.partial(bench_dse.run, points=points)),
+         functools.partial(bench_dse.run, points=points, workers=workers,
+                           search=search, cache=cache)),
         ("replay", "Plan/trace replay + calibration (record real kernels)",
          bench_replay.run),
         ("serve", "Continuous-batching serving (engine vs simulate_serve)",
@@ -88,6 +89,20 @@ def main(argv=None) -> None:
     ap.add_argument("--points", type=int, metavar="N", default=None,
                     help="design-point budget for the dse section "
                          "(presets first; CI smoke)")
+    ap.add_argument("--workers", type=int, metavar="N", default=None,
+                    help="process-pool width for the dse sweep "
+                         "(rows byte-identical to serial; DESIGN.md §16)")
+    ap.add_argument("--search", action="store_true",
+                    help="run the dse section as a successive-halving "
+                         "frontier search instead of the exhaustive "
+                         "grid (DESIGN.md §16)")
+    ap.add_argument("--cache", metavar="DIR", default=None,
+                    help="on-disk simulation cache for the dse section "
+                         "— repeat runs warm-start (DESIGN.md §16)")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="cProfile each section into DIR: raw pstats "
+                         "(<section>.pstats) + a top-20 cumulative text "
+                         "summary (<section>.txt)")
     ap.add_argument("--perfetto", metavar="DIR", default=None,
                     help="dump Perfetto trace_event timelines registered "
                          "by the sections that ran (sim/serve/dse/replay) "
@@ -107,7 +122,8 @@ def main(argv=None) -> None:
                     help="print available sections and exit")
     args = ap.parse_args(argv)
 
-    sections = _sections(points=args.points)
+    sections = _sections(points=args.points, workers=args.workers,
+                         search=args.search, cache=args.cache)
     if args.list_sections:
         for key, title, _ in sections:
             print(f"{key:24s} {title}")
@@ -129,13 +145,35 @@ def main(argv=None) -> None:
               "command": "benchmarks/run.py " + " ".join(args.sections),
               "metadata": common.run_metadata(),
               "sections": [], "plans": []}
+    if args.profile:
+        os.makedirs(args.profile, exist_ok=True)
+
     print("name,us_per_call,derived")
     failed = 0
     for key, title, fn in sections:
         print(f"# --- {title} ---")
         sec = {"name": key, "title": title, "ok": True, "rows": []}
         try:
-            for row in fn():
+            if args.profile:
+                # Receipts for hot-path claims: raw pstats for pstats/
+                # snakeviz plus a human-readable top-20 cumulative dump.
+                import cProfile
+                import io
+                import pstats
+                prof = cProfile.Profile()
+                out = prof.runcall(fn)
+                pstats_path = os.path.join(args.profile, f"{key}.pstats")
+                prof.dump_stats(pstats_path)
+                buf = io.StringIO()
+                stats = pstats.Stats(prof, stream=buf)
+                stats.sort_stats("cumulative").print_stats(20)
+                with open(os.path.join(args.profile, f"{key}.txt"),
+                          "w") as f:
+                    f.write(buf.getvalue())
+                print(f"# profile -> {pstats_path}", file=sys.stderr)
+            else:
+                out = fn()
+            for row in out:
                 print(row)
                 sec["rows"].append(_parse_row(row))
         except Exception:  # noqa: BLE001
@@ -148,7 +186,12 @@ def main(argv=None) -> None:
 
     if args.json:
         report["plans"] = [p.summary() for p in common.PLAN_LOG]
-        if common.DSE_LOG:
+        if common.SEARCH_LOG:
+            # The search artifact (DESIGN.md §16): the survivors' full
+            # sweep plus the per-rung elimination ledger — supersedes
+            # the plain dse block for a --search run (CI uploads this).
+            report["search"] = common.SEARCH_LOG[-1].to_dict()
+        elif common.DSE_LOG:
             report["dse"] = common.DSE_LOG[-1].to_dict()
         if common.SERVE_LOG:
             # The serving artifact (DESIGN.md §11): the engine's executed

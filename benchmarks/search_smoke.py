@@ -1,0 +1,110 @@
+"""Search/cache smoke checks (``make search-smoke`` — DESIGN.md §16).
+
+Takes the ``run.py dse --search --json`` artifact written just before and
+asserts it is well-formed (rows, interned plan table, rung ledger, the
+full-sim budget actually below the candidate count), then exercises the
+two fast-DSE invariants in-process on a tiny grid:
+
+* **cache warm vs cold**: the second sweep over a shared on-disk cache
+  must be hits-only, produce byte-identical rows, and run measurably
+  faster than the cold sweep that populated the store;
+* **search == grid**: successive halving over a small exhaustive space
+  recovers exactly the grid's Pareto frontier while fully simulating at
+  most half the points.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [_root, os.path.join(_root, "src")]
+
+
+def check_artifact(path: str) -> None:
+    with open(path) as f:
+        d = json.load(f)
+    assert d["ok"], d
+    search = d["search"]
+    assert search["rows"], "search emitted no rows"
+    for row in search["rows"]:
+        for key in ("latency_cycles", "energy_pj", "edp", "plan_ref",
+                    "bottleneck"):
+            assert key in row, (key, sorted(row.keys()))
+        assert row["plan_ref"] in search["plan_table"], row["plan_ref"]
+        assert row["bottleneck"], "full-fidelity row missing bottleneck"
+    meta = search["search"]
+    assert meta["rungs"], "no rung ledger"
+    final = meta["rungs"][-1]
+    assert not final["proxy"], "last rung must be full fidelity"
+    assert len(final["survivors"]) <= meta["space_size"], meta
+    if meta["space_size"] > 3:          # enough room for eliminations
+        assert len(final["survivors"]) < meta["space_size"], (
+            "search eliminated nothing")
+    assert all(search["pareto"].values()), "empty Pareto frontier"
+    print(f"search artifact ok: {len(search['rows'])} rows, "
+          f"{meta['space_size']} candidates -> "
+          f"{len(final['survivors'])} survivors, "
+          f"{meta['proxy_sims']} proxy + {meta['full_sims']} full sims")
+
+
+def check_cache_warm_cold() -> None:
+    from repro.dse import run_sweep
+    from repro.dse.sweep import Axes
+    axes = Axes(groups=((2, 1), (4, 2), (8, 4)),
+                rewrite_bus_bits=(512,), ping_pong=(True,))
+    kw = dict(models=["whisper-base"], axes=axes, seq_lens=(512,),
+              include_presets=False)
+    with tempfile.TemporaryDirectory() as store:
+        t0 = time.perf_counter()
+        cold = run_sweep(cache=store, **kw)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = run_sweep(cache=store, **kw)
+        t_warm = time.perf_counter() - t0
+    assert cold.cache_stats["misses"] == len(cold.rows), cold.cache_stats
+    assert warm.cache_stats["hits"] == len(warm.rows), warm.cache_stats
+    assert warm.cache_stats["misses"] == 0, warm.cache_stats
+    assert ([r.to_dict() for r in warm.rows]
+            == [r.to_dict() for r in cold.rows]), (
+        "warm rows differ from cold rows")
+    assert t_warm < t_cold, (
+        f"warm sweep ({t_warm:.2f}s) not faster than cold ({t_cold:.2f}s)")
+    print(f"cache ok: cold {t_cold:.2f}s -> warm {t_warm:.2f}s "
+          f"({t_cold / t_warm:.1f}x), {warm.cache_stats['hits']} hits")
+
+
+def check_search_matches_grid() -> None:
+    from repro.dse import run_sweep, successive_halving
+    from repro.dse.sweep import Axes
+    axes = Axes(groups=((2, 1), (4, 2), (8, 4)),
+                rewrite_bus_bits=(512, 1024), ping_pong=(True, False))
+    kw = dict(models=["whisper-base"], seq_len=512, include_presets=False)
+    grid = run_sweep(models=["whisper-base"], axes=axes, seq_lens=(512,),
+                     include_presets=False)
+    found = successive_halving(axes=axes, **kw)
+    want = sorted((r.hw, r.latency_cycles, r.energy_pj)
+                  for r in grid.pareto())
+    got = sorted((r.hw, r.latency_cycles, r.energy_pj)
+                 for r in found.sweep.pareto())
+    assert want == got, f"frontier mismatch:\n  grid {want}\n  search {got}"
+    n_grid = len(grid.rows)
+    assert found.full_sims <= n_grid / 2, (
+        f"search fully simulated {found.full_sims} of {n_grid} points")
+    print(f"search==grid ok: frontier of {len(want)} recovered with "
+          f"{found.full_sims}/{n_grid} full sims")
+
+
+def main() -> None:
+    if len(sys.argv) > 1:
+        check_artifact(sys.argv[1])
+    check_cache_warm_cold()
+    check_search_matches_grid()
+    print("search smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,16 +34,22 @@ columns next to the single-chip sweep's latency/energy ones
 Entry points: ``python -m repro.dse`` and ``benchmarks/run.py dse``
 (``--json`` artifact, ``--points N`` budget for CI smoke).
 """
+from repro.dse.cache import (CachedPoint, SimCache, energy_fingerprint,
+                             hw_fingerprint, sim_cache_key)
 from repro.dse.sweep import (Axes, DEFAULT_AXES, SweepResult, SweepRow,
                              calibration_label, dominates, grid_points,
-                             pareto_frontier, run_sweep, simulate_point,
-                             utilization_knee)
+                             pareto_frontier, resolve_plan_json, run_sweep,
+                             simulate_point, utilization_knee)
+from repro.dse.search import (RungRecord, SearchResult, sample_space,
+                              successive_halving)
 from repro.shard.sweep import (ShardSweepResult, ShardSweepRow,
                                run_shard_sweep)
 
 __all__ = [
-    "Axes", "DEFAULT_AXES", "SweepResult", "SweepRow", "calibration_label",
-    "dominates", "grid_points", "pareto_frontier", "run_sweep",
-    "ShardSweepResult", "ShardSweepRow", "run_shard_sweep",
-    "simulate_point", "utilization_knee",
+    "Axes", "CachedPoint", "DEFAULT_AXES", "RungRecord", "SearchResult",
+    "SimCache", "SweepResult", "SweepRow", "calibration_label",
+    "dominates", "energy_fingerprint", "grid_points", "hw_fingerprint",
+    "pareto_frontier", "resolve_plan_json", "run_sweep", "sample_space",
+    "ShardSweepResult", "ShardSweepRow", "run_shard_sweep", "sim_cache_key",
+    "simulate_point", "successive_halving", "utilization_knee",
 ]

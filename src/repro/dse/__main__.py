@@ -66,6 +66,25 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full sweep artifact (rows + plans + "
                          "pareto + knees)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool width for the sweep (rows stay "
+                         "byte-identical to serial; DESIGN.md §16)")
+    ap.add_argument("--cache", metavar="DIR", default=None,
+                    help="on-disk simulation cache directory — re-runs "
+                         "warm-start from it (DESIGN.md §16)")
+    ap.add_argument("--search", action="store_true",
+                    help="successive-halving frontier search instead of "
+                         "the exhaustive grid: cheap low-seq rungs rank "
+                         "candidates, survivors graduate to full "
+                         "fidelity (DESIGN.md §16)")
+    ap.add_argument("--search-candidates", type=int, default=None,
+                    help="candidate budget drawn from the grid for "
+                         "--search (default: the whole grid)")
+    ap.add_argument("--search-eta", type=int, default=2,
+                    help="halving rate between rungs (default 2)")
+    ap.add_argument("--search-rungs", type=int, default=None,
+                    help="rung count (default: 2 for <=16 candidates, "
+                         "else 3)")
     args = ap.parse_args(argv)
 
     calibrations = (None,)
@@ -87,11 +106,25 @@ def main(argv=None) -> None:
         base = ENERGY_PRESETS[args.energy]
         energy_models = [base] + [e for e in ENERGY_PRESETS.values()
                                   if e.name != base.name]
-    result = run_sweep(models=args.models, axes=DEFAULT_AXES,
-                       points=args.points, seq_lens=args.seq,
-                       energy_model=ENERGY_PRESETS[args.energy],
-                       energy_models=energy_models,
-                       calibrations=calibrations, progress=progress)
+    search = None
+    if args.search:
+        from repro.dse.search import successive_halving
+        search = successive_halving(
+            models=args.models, axes=DEFAULT_AXES,
+            num_candidates=args.search_candidates,
+            eta=args.search_eta, rungs=args.search_rungs,
+            seq_len=args.seq[0],
+            energy_model=ENERGY_PRESETS[args.energy],
+            energy_models=energy_models, calibrations=calibrations,
+            cache=args.cache, workers=args.workers, progress=progress)
+        result = search.sweep
+    else:
+        result = run_sweep(models=args.models, axes=DEFAULT_AXES,
+                           points=args.points, seq_lens=args.seq,
+                           energy_model=ENERGY_PRESETS[args.energy],
+                           energy_models=energy_models,
+                           calibrations=calibrations, progress=progress,
+                           workers=args.workers, cache=args.cache)
     print(file=sys.stderr)
     knees = result.knees()
     for model, seq_len in result.groups():
@@ -107,11 +140,24 @@ def main(argv=None) -> None:
             print(f"   {em:<28s} jaccard vs {rec['base']}: {j:.2f} "
                   f"({len(rec['frontier_hw'][em])} frontier designs)")
         print(f"   stable across all tables: {rec['stable_hw']}")
+    if search is not None:
+        print(f"== successive-halving search: {search.space_size} "
+              f"candidates, eta={search.eta} ==")
+        for rec in search.rungs:
+            kind = "proxy" if rec.proxy else "full"
+            print(f"   rung {rec.rung} ({kind}): "
+                  f"{len(rec.candidates)} -> {len(rec.survivors)} "
+                  f"(quota {rec.quota}, seq {sorted(set(rec.seq_lens.values()))})")
+        print(f"   proxy sims {search.proxy_sims}, "
+              f"full sims {search.full_sims}")
+    if result.cache_stats:
+        print(f"# cache: {result.cache_stats}")
     if result.skipped:
         print(f"# {len(result.skipped)} invalid grid combinations skipped")
     if args.json:
+        art = search.to_dict() if search is not None else result.to_dict()
         with open(args.json, "w") as f:
-            json.dump(result.to_dict(), f, indent=2)
+            json.dump(art, f, indent=2)
         print(f"# sweep artifact -> {args.json}", file=sys.stderr)
 
 

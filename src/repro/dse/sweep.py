@@ -26,10 +26,13 @@ calibrated with uncalibrated timing.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from repro.configs.hardware import HardwareConfig
+from repro.dse.cache import (CachedPoint, SimCache, energy_fingerprint,
+                             resolve_cache, sim_cache_key)
 from repro.sim.energy import EnergyModel, STREAMDCIM_ENERGY_BASE
 
 
@@ -216,6 +219,10 @@ class SweepResult:
     skipped: List[Dict[str, object]]
     energy_model: str
     knee_tolerance: float = 0.10
+    # Simulation-cache counters for this sweep (DESIGN.md §16): hits /
+    # misses / disk_hits / stores, merged across parallel workers.
+    # Empty when the sweep ran uncached.
+    cache_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def models(self) -> List[str]:
         seen: List[str] = []
@@ -353,7 +360,7 @@ class SweepResult:
                 }
         return out
 
-    def to_dict(self) -> Dict[str, object]:
+    def to_dict(self, intern_plans: bool = True) -> Dict[str, object]:
         # Frontier members ARE entries of self.rows: index by identity
         # (value-equality .index() would deep-compare plan JSON, O(rows^2)).
         index_of = {id(r): i for i, r in enumerate(self.rows)}
@@ -361,18 +368,35 @@ class SweepResult:
                       [index_of[id(r)]
                        for r in pareto_frontier(self.rows_for(m, s, c, e))]
                       for m, s, c, e in self._cells()}
-        return {
+        row_dicts = [r.to_dict() for r in self.rows]
+        plan_table: Dict[str, str] = {}
+        if intern_plans:
+            # Store-by-hash: the energy axis emits one row per cost table
+            # per simulated point, all sharing one plan — serializing the
+            # plan JSON once per *distinct plan* (rows carry a
+            # ``plan_ref`` into ``plan_table``) shrinks the artifact by
+            # the axis multiplicity.  ``resolve_plan_json`` rehydrates.
+            for rd in row_dicts:
+                pj = rd.pop("plan_json")
+                ref = hashlib.sha256(pj.encode()).hexdigest()[:16]
+                plan_table.setdefault(ref, pj)
+                rd["plan_ref"] = ref
+        d = {
             "energy_model": self.energy_model,
             "energy_models": self.energy_models(),
             "num_rows": len(self.rows),
             "calibrations": self.calibrations(),
-            "rows": [r.to_dict() for r in self.rows],
+            "rows": row_dicts,
             "skipped": list(self.skipped),
             "pareto": pareto_ids,  # row indices, per (model, shape, cal, em)
             "knees": {m: r.to_dict() for m, r in self.knees().items()},
             "knee_tolerance": self.knee_tolerance,
             "frontier_sensitivity": self.frontier_sensitivity(),
+            "cache_stats": dict(self.cache_stats),
         }
+        if intern_plans:
+            d["plan_table"] = plan_table
+        return d
 
 
 # ---------------------------------------------------------------------------
@@ -394,41 +418,104 @@ def calibration_label(calibration) -> str:
                                 for r, s in sorted(calibration.items()))
 
 
-def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
-                energy_models: Sequence[EnergyModel],
-                calibration=None) -> List[SweepRow]:
+def resolve_plan_json(artifact: Mapping[str, object],
+                      row: Mapping[str, object]) -> str:
+    """Rehydrate a row's plan JSON from a ``SweepResult.to_dict()``
+    artifact: interned artifacts carry ``plan_ref`` into the top-level
+    ``plan_table`` side table; un-interned rows carry ``plan_json``
+    inline.  Raises ``KeyError`` on a dangling reference."""
+    if "plan_json" in row:
+        return row["plan_json"]
+    return artifact["plan_table"][row["plan_ref"]]
+
+
+def _evaluate_point(cfg, hw: HardwareConfig, seq_len: int,
+                    energy_models: Sequence[EnergyModel],
+                    calibration=None,
+                    cache: Optional[SimCache] = None,
+                    stamp: bool = True,
+                    ) -> Tuple[List[SweepRow], Optional[CachedPoint]]:
     """One (model config, design point, shape) evaluation through the
     canonical path — ``plan_model`` -> ``simulate_plan`` -> energy fold —
-    returning one row per energy model.  The simulation runs *once*; the
-    energy axis is a pure re-fold of the same trace under each pJ-cost
-    table (latency/bytes are cost-table-invariant by construction)."""
-    from repro.obs.attribution import bottleneck_of
-    from repro.obs.whatif import headroom as causal_headroom
+    returning one row per energy model plus the cacheable summary record
+    (None when uncached).  The simulation runs *once*; the energy axis is
+    a pure re-fold of the same trace under each pJ-cost table
+    (latency/bytes are cost-table-invariant by construction).
+
+    ``stamp=False`` skips the ``bottleneck``/``headroom`` attribution
+    stamps — the what-if headroom replays the trace DAG once per
+    resource, which is comparable in cost to the simulation itself, so
+    the successive-halving search's cheap rungs opt out (their rows are
+    ranking fodder, not frontier artifacts).  Cache entries are
+    namespaced by that choice (``evaluator="proxy"``) so an unstamped
+    record never satisfies a full-fidelity lookup."""
     from repro.plan.planner import plan_model
     from repro.sim.pipeline import simulate_plan
     from repro.sim.replay import resolve_calibration
     plan = plan_model(cfg, hw=hw, seq_len=seq_len)
-    res = simulate_plan(plan, hw=hw, calibration=calibration)
-    scale = resolve_calibration(calibration)
     plan_json = plan.to_json()
-    bottleneck = bottleneck_of(res.trace)
-    hroom = causal_headroom(res.trace)
-    rows = []
+    scale = resolve_calibration(calibration)
+    label = calibration_label(calibration)
+    scale_d = dict(scale) if scale else {}
+    hw_params = dataclasses.asdict(hw)
+    em_fps = [energy_fingerprint(em) for em in energy_models]
+
+    def rows_of(cycles, hbm_bytes, util, folds, bottleneck, hroom):
+        return [SweepRow(
+            model=cfg.name, seq_len=seq_len, hw=hw.name,
+            hw_params=hw_params, energy_model=em.name,
+            latency_cycles=cycles, hbm_bytes=hbm_bytes,
+            energy_pj=fold["total_pj"], edp=fold["edp"],
+            utilization=dict(util),
+            energy_by_resource=dict(fold["by_resource"]),
+            plan_json=plan_json, calibration=label,
+            calibration_scale=scale_d, bottleneck=bottleneck,
+            headroom=dict(hroom))
+            for em, fold in zip(energy_models, folds)]
+
+    key = None
+    if cache is not None:
+        key = sim_cache_key(plan_json, hw, scale,
+                            evaluator="point" if stamp else "proxy")
+        hit = cache.lookup(key, em_fps)
+        if hit is not None:
+            return rows_of(hit.cycles, hit.hbm_bytes, hit.utilization,
+                           [hit.energy[fp] for fp in em_fps],
+                           hit.bottleneck, hit.headroom), hit
+
+    res = simulate_plan(plan, hw=hw, calibration=calibration)
+    bottleneck, hroom = "", {}
+    if stamp:
+        from repro.obs.attribution import bottleneck_of
+        from repro.obs.whatif import headroom as causal_headroom
+        bottleneck = bottleneck_of(res.trace)
+        hroom = causal_headroom(res.trace)
+    folds = []
     for em in energy_models:
         rep = res.energy(em)
-        rows.append(SweepRow(
-            model=cfg.name, seq_len=seq_len, hw=hw.name,
-            hw_params=dataclasses.asdict(hw), energy_model=em.name,
-            latency_cycles=res.cycles, hbm_bytes=res.hbm_bytes,
-            energy_pj=rep.total_pj, edp=rep.edp,
-            utilization=res.trace.utilizations(),
-            energy_by_resource=dict(rep.by_resource),
-            plan_json=plan_json,
-            calibration=calibration_label(calibration),
-            calibration_scale=dict(scale) if scale else {},
-            bottleneck=bottleneck,
-            headroom=hroom))
-    return rows
+        folds.append({"name": em.name, "total_pj": rep.total_pj,
+                      "edp": rep.edp, "by_resource": dict(rep.by_resource)})
+    record = None
+    if cache is not None:
+        record = CachedPoint(
+            key=key, cycles=res.cycles, hbm_bytes=res.hbm_bytes,
+            utilization=res.trace.utilizations(), bottleneck=bottleneck,
+            headroom=hroom, energy=dict(zip(em_fps, folds)),
+            info={"model": cfg.name, "seq_len": seq_len, "hw": hw.name,
+                  "calibration": label})
+        cache.store(record)
+    return rows_of(res.cycles, res.hbm_bytes, res.trace.utilizations(),
+                   folds, bottleneck, hroom), record
+
+
+def _point_rows(cfg, hw: HardwareConfig, seq_len: int,
+                energy_models: Sequence[EnergyModel],
+                calibration=None, cache: Optional[SimCache] = None,
+                stamp: bool = True) -> List[SweepRow]:
+    """Back-compat row-only wrapper over ``_evaluate_point``."""
+    return _evaluate_point(cfg, hw, seq_len, energy_models,
+                           calibration=calibration, cache=cache,
+                           stamp=stamp)[0]
 
 
 def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
@@ -444,6 +531,38 @@ def simulate_point(cfg, hw: HardwareConfig, seq_len: int = 0,
     return _point_rows(cfg, hw, seq_len, [em], calibration)[0]
 
 
+#: Worker-process cache instances, one per on-disk store path (or the
+#: ``None`` key for a process-local memo) — reused across the tasks a
+#: pool worker serves so intra-worker hits don't re-open the store.
+_WORKER_CACHES: Dict[Optional[str], SimCache] = {}
+
+
+def _sweep_worker(task):
+    """Evaluate one sweep task in a pool worker.  Module-level (pickled
+    by reference), resolves the model config from the registry by name,
+    and binds a worker-local ``SimCache`` to the shared disk path so
+    parallel workers warm the same store the serial path reads.  Returns
+    ``(rows, CachedPoint|None, stats_delta)`` — the parent adopts the
+    record into its own cache and merges the stat delta, keeping
+    ``SweepResult.cache_stats`` identical in meaning to a serial run."""
+    name, seq, cal, hw, ems, stamp, cache_path, want_record = task
+    from repro.configs import registry
+    cfg = registry.get_config(name)
+    cache = None
+    if want_record:
+        cache = _WORKER_CACHES.get(cache_path)
+        if cache is None:
+            cache = SimCache(cache_path)
+            _WORKER_CACHES[cache_path] = cache
+    before = dict(cache.stats) if cache is not None else {}
+    rows, record = _evaluate_point(cfg, hw, seq, list(ems),
+                                   calibration=cal, cache=cache,
+                                   stamp=stamp)
+    delta = ({k: v - before.get(k, 0) for k, v in cache.stats.items()}
+             if cache is not None else {})
+    return rows, record, delta
+
+
 def run_sweep(models: Optional[Sequence[str]] = None,
               base: Optional[HardwareConfig] = None,
               axes: Axes = DEFAULT_AXES,
@@ -454,7 +573,12 @@ def run_sweep(models: Optional[Sequence[str]] = None,
               include_presets: bool = True,
               knee_tolerance: float = 0.10,
               calibrations: Sequence[object] = (None,),
-              progress=None) -> SweepResult:
+              progress=None,
+              workers: Optional[int] = None,
+              cache=None,
+              stamp: bool = True,
+              hw_points: Optional[Sequence[HardwareConfig]] = None,
+              ) -> SweepResult:
     """Run the grid.  ``models`` are registry arch names (default: the
     simulator-supported pool); ``points`` caps the number of *design
     points* (the per-model row count follows), presets first so a small
@@ -471,27 +595,79 @@ def run_sweep(models: Optional[Sequence[str]] = None,
     (the simulation itself runs once per point — latency is
     cost-table-invariant), yielding per-table frontiers and the
     ``SweepResult.frontier_sensitivity()`` report.  The scalar
-    ``energy_model`` remains the single-table entry point."""
+    ``energy_model`` remains the single-table entry point.
+
+    Fast-DSE knobs (DESIGN.md §16):
+
+    * ``workers=N`` fans the evaluations out over a process pool.  The
+      task list is built first in the exact serial nesting order (model
+      -> shape -> calibration -> design point) and ``executor.map``
+      preserves input order, so rows, skipped records, and ``progress``
+      callbacks are byte-identical to a serial sweep — parallelism is a
+      wall-clock optimization, never a semantic one.
+    * ``cache`` memoizes the simulate->fold->stamp suffix: None (off), a
+      ``SimCache``, or a directory path for the on-disk warm-start
+      store.  ``SweepResult.cache_stats`` reports this sweep's
+      hits/misses (deltas, even on a pre-warmed cache object).
+    * ``stamp=False`` skips the bottleneck/headroom stamps (search
+      proxy rungs); ``hw_points`` bypasses grid materialization with an
+      explicit design-point list (the search's survivor sets)."""
     from repro.configs import registry
     ems = (list(energy_models) if energy_models
            else [energy_model or STREAMDCIM_ENERGY_BASE])
     model_names = list(models) if models else list(registry.SIM_ARCHS)
-    presets = tuple(registry.HW_CONFIGS.values()) if include_presets else ()
-    hw_points, skipped = grid_points(base, axes, presets)
+    if hw_points is not None:
+        pts, skipped = list(hw_points), []
+    else:
+        presets = (tuple(registry.HW_CONFIGS.values())
+                   if include_presets else ())
+        pts, skipped = grid_points(base, axes, presets)
     if points is not None:
-        hw_points = hw_points[:max(points, 0)]
+        pts = pts[:max(points, 0)]
+    sim_cache = resolve_cache(cache)
+    before = dict(sim_cache.stats) if sim_cache is not None else {}
+    # Deterministic task order == the serial nesting order; every
+    # execution strategy below walks this list in order.
+    tasks = [(name, seq, cal, hw)
+             for name in model_names
+             for seq in seq_lens
+             for cal in calibrations
+             for hw in pts]
     rows: List[SweepRow] = []
-    for name in model_names:
-        cfg = registry.get_config(name)
-        for seq in seq_lens:
-            for cal in calibrations:
-                for hw in hw_points:
-                    pt_rows = _point_rows(cfg, hw, seq, ems,
-                                          calibration=cal)
-                    rows.extend(pt_rows)
-                    if progress is not None:
-                        # one call per *simulated point* — the energy
-                        # axis re-folds the same trace, no extra work
-                        progress(pt_rows[0])
+    if workers and workers > 1 and len(tasks) > 1:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+        ctx = (mp.get_context("fork")
+               if "fork" in mp.get_all_start_methods()
+               else mp.get_context())
+        payload = [(name, seq, cal, hw, tuple(ems), stamp,
+                    sim_cache.path if sim_cache is not None else None,
+                    sim_cache is not None)
+                   for name, seq, cal, hw in tasks]
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=ctx) as ex:
+            for pt_rows, record, delta in ex.map(_sweep_worker, payload,
+                                                 chunksize=1):
+                rows.extend(pt_rows)
+                if sim_cache is not None:
+                    if record is not None:
+                        sim_cache.adopt(record)
+                    sim_cache.merge_stats(delta)
+                if progress is not None:
+                    # one call per *simulated point* — the energy axis
+                    # re-folds the same trace, no extra work
+                    progress(pt_rows[0])
+    else:
+        for name, seq, cal, hw in tasks:
+            cfg = registry.get_config(name)
+            pt_rows, _ = _evaluate_point(cfg, hw, seq, ems,
+                                         calibration=cal, cache=sim_cache,
+                                         stamp=stamp)
+            rows.extend(pt_rows)
+            if progress is not None:
+                progress(pt_rows[0])
+    stats = ({k: v - before.get(k, 0)
+              for k, v in sim_cache.stats.items()}
+             if sim_cache is not None else {})
     return SweepResult(rows=rows, skipped=skipped, energy_model=ems[0].name,
-                       knee_tolerance=knee_tolerance)
+                       knee_tolerance=knee_tolerance, cache_stats=stats)

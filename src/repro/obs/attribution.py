@@ -23,6 +23,7 @@ rewriting instead of compute.  This module answers that question for
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from collections import defaultdict
 from typing import Dict, List
@@ -49,11 +50,13 @@ _FRAMING = re.compile(r"t\d+|r\d+|c\d+|pre|dec")
 _CHIP = re.compile(r"c\d+")
 
 
+@functools.lru_cache(maxsize=4096)
 def base_resource(resource: str) -> str:
     """Fold a sharded-trace resource name to its single-chip base: the
     per-chip prefix strips (``c3.ATTN`` -> ``ATTN``) and NoC link
     instances aggregate (``NOC_L2`` -> ``INTERCONNECT``).  Identity on
-    unprefixed single-chip names."""
+    unprefixed single-chip names.  Memoized — the what-if replays call
+    this once per event per projection, over a tiny name alphabet."""
     head, _, rest = resource.partition(".")
     if rest and _CHIP.fullmatch(head):
         resource = rest

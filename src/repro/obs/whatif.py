@@ -176,12 +176,38 @@ def headroom(trace,
     base = trace.makespan
     if not base:
         return {}
-    names = resources or tuple(sorted({base_resource(e.resource)
-                                       for e in trace.events}))
+    # One k→∞ projection per base resource is the DSE stamp's hot path
+    # (it runs per swept point).  The generic ``project``/``_replay``
+    # pair would re-sort the events and re-derive ``base_resource`` for
+    # every resource; precompute the replay tuples once and inline the
+    # list-schedule loop — arithmetic identical to ``_replay`` with
+    # ``duration = 0.0 if freed else cycles / 1.0``.
+    prep = [(e.task_id, e.deps, e.cycles / 1.0, e.resource,
+             base_resource(e.resource))
+            for e in sorted(trace.events, key=lambda e: e.task_id)]
+    names = resources or tuple(sorted({p[4] for p in prep}))
     out: Dict[str, float] = {}
     for r in names:
-        p = project(trace, {r: math.inf})
-        out[r] = 1.0 - p.projected_makespan / base
+        free: Dict[str, float] = {}
+        end: Dict[int, float] = {}
+        end_get = end.get
+        free_get = free.get
+        makespan = 0.0
+        for tid, deps, cyc, res, bres in prep:
+            start = 0.0
+            for d in deps:
+                t = end_get(d)
+                if t is not None and t > start:
+                    start = t
+            f = free_get(res, 0.0)
+            if f > start:
+                start = f
+            fin = start if bres == r else start + cyc
+            end[tid] = fin
+            free[res] = fin
+            if fin > makespan:
+                makespan = fin
+        out[r] = 1.0 - makespan / base
     return out
 
 

@@ -38,7 +38,7 @@ from repro.sim.workload import BLOCK, AttnOp
 import math
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Task:
     kind: str
     resource: str
@@ -68,40 +68,64 @@ class Engine:
         return self.task("sync", "SYNC", 0, deps, tag=tag)
 
     def run(self) -> Trace:
-        trace = Trace()
+        # The DSE/sweep hot loop: locals for every per-iteration global
+        # lookup, events gathered in a plain list and handed to the
+        # trace in one assignment (one cache invalidation instead of one
+        # per ``add``).  Semantics are unchanged from the reference loop.
+        tasks = self._tasks
+        n = len(tasks)
         free: Dict[str, int] = {}
         last_on: Dict[str, int] = {}   # last emitted event per resource
-        end: List[int] = [0] * len(self._tasks)
+        end: List[int] = [0] * n
         # Resolved predecessors per task: data deps with zero-cost SYNC
         # joins flattened to the real events behind them, plus the
         # in-order resource-occupancy predecessor.  Stamped onto every
         # emitted Event so the trace is a self-contained scheduling DAG
         # (repro.obs.critpath / repro.obs.whatif rebuild the schedule
         # from events alone).
-        preds: List[Tuple[int, ...]] = [()] * len(self._tasks)
-        for i, t in enumerate(self._tasks):
-            start = max([end[d] for d in t.deps], default=0)
+        preds: List[Tuple[int, ...]] = [()] * n
+        events: List[Event] = []
+        emit = events.append
+        free_get = free.get
+        last_get = last_on.get
+        is_sync = [t.resource == "SYNC" for t in tasks]
+        for i, t in enumerate(tasks):
+            start = 0
             resolved: List[int] = []
+            extend = resolved.extend
+            append = resolved.append
             for d in t.deps:
-                if self._tasks[d].resource == "SYNC":
-                    resolved.extend(preds[d])
+                e = end[d]
+                if e > start:
+                    start = e
+                if is_sync[d]:
+                    extend(preds[d])
                 else:
-                    resolved.append(d)
-            if t.resource != "SYNC":
-                start = max(start, free.get(t.resource, 0))
-                rp = last_on.get(t.resource)
+                    append(d)
+            res = t.resource
+            if not is_sync[i]:
+                f = free_get(res, 0)
+                if f > start:
+                    start = f
+                rp = last_get(res)
                 if rp is not None:
-                    resolved.append(rp)
-            seen: set = set()
-            deps = tuple(d for d in resolved
-                         if not (d in seen or seen.add(d)))
+                    append(rp)
+            if len(resolved) > 1:
+                seen: set = set()
+                deps = tuple(d for d in resolved
+                             if not (d in seen or seen.add(d)))
+            else:
+                deps = tuple(resolved)
             preds[i] = deps
-            end[i] = start + t.cycles
-            if t.resource != "SYNC":
-                free[t.resource] = end[i]
-                last_on[t.resource] = i
-                trace.add(Event(i, t.kind, t.resource, start, end[i],
-                                t.nbytes, t.tag, deps=deps))
+            fin = start + t.cycles
+            end[i] = fin
+            if not is_sync[i]:
+                free[res] = fin
+                last_on[res] = i
+                emit(Event(i, t.kind, res, start, fin,
+                           t.nbytes, t.tag, deps))
+        trace = Trace()
+        trace.events = events
         self.finish_times = end
         return trace
 

@@ -1,0 +1,245 @@
+"""Fast-DSE tests (DESIGN.md §16): simulation cache, parallel sweep
+executor, plan interning, and the successive-halving search.
+
+The three ISSUE-10 acceptance pins live here: a cache hit reproduces the
+cold simulation's metrics *exactly* (not approximately — the cache
+stores the cold run's serialized numbers and JSON round-trips floats
+bit-exactly); ``run_sweep(workers=N)`` emits rows byte-identical to a
+serial sweep; and the search recovers the exhaustive grid's Pareto
+frontier on a small space while fully simulating at most half the
+points.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import registry
+from repro.configs.hardware import HardwareConfig, STREAMDCIM_BASE
+from repro.dse import (Axes, SimCache, energy_fingerprint, hw_fingerprint,
+                       resolve_plan_json, run_sweep, sample_space,
+                       sim_cache_key, successive_halving)
+
+SEQ = 512           # short sequences keep the swept points fast
+
+SMALL_AXES = Axes(groups=((2, 1), (4, 2), (8, 4)),
+                  rewrite_bus_bits=(512,), ping_pong=(True,))
+
+GRID_AXES = Axes(groups=((2, 1), (4, 2), (8, 4)),
+                 rewrite_bus_bits=(512, 1024), ping_pong=(True, False))
+
+KW = dict(models=["whisper-base"], axes=SMALL_AXES, seq_lens=(SEQ,),
+          include_presets=False)
+
+
+def _row_dicts(result):
+    return [r.to_dict() for r in result.rows]
+
+
+# ------------------------------------------------------------ cache keying
+
+def test_hw_fingerprint_ignores_name_only():
+    renamed = dataclasses.replace(STREAMDCIM_BASE, name="other-name")
+    assert hw_fingerprint(renamed) == hw_fingerprint(STREAMDCIM_BASE)
+    slower = dataclasses.replace(STREAMDCIM_BASE, rewrite_bus_bits=1024)
+    assert hw_fingerprint(slower) != hw_fingerprint(STREAMDCIM_BASE)
+
+
+def test_energy_fingerprint_includes_name():
+    # Same costs under a different name label a different frontier cell:
+    # the folds must cache separately.
+    em = registry.ENERGY_CONFIGS[next(iter(registry.ENERGY_CONFIGS))]
+    renamed = dataclasses.replace(em, name="same-costs-other-name")
+    assert energy_fingerprint(renamed) != energy_fingerprint(em)
+
+
+def test_cache_key_namespaces_proxy_from_point():
+    key_pt = sim_cache_key('{"plan": 1}', STREAMDCIM_BASE,
+                           evaluator="point")
+    key_px = sim_cache_key('{"plan": 1}', STREAMDCIM_BASE,
+                           evaluator="proxy")
+    assert key_pt != key_px
+    # calibration scale is part of the key (scaling changes the schedule)
+    assert sim_cache_key('{"plan": 1}', STREAMDCIM_BASE,
+                         scale={"ATTN": 2.0}) != key_pt
+
+
+# ------------------------------------------------- cache hit == cold run
+
+def test_cache_hit_exactly_reproduces_cold_rows():
+    cache = SimCache()
+    cold = run_sweep(cache=cache, **KW)
+    assert cold.cache_stats["misses"] == len(cold.rows)
+    assert cold.cache_stats["hits"] == 0
+    warm = run_sweep(cache=cache, **KW)
+    assert warm.cache_stats["hits"] == len(warm.rows)
+    assert warm.cache_stats["misses"] == 0
+    # exact equality, field by field — latency, energy floats, headroom,
+    # bottleneck stamps, everything
+    assert _row_dicts(warm) == _row_dicts(cold)
+
+
+def test_disk_cache_warm_starts_fresh_process_state(tmp_path):
+    store = str(tmp_path / "simcache")
+    cold = run_sweep(cache=store, **KW)
+    # A brand-new SimCache over the same directory — models a second
+    # ``run.py dse`` invocation — must serve everything from disk.
+    warm = run_sweep(cache=SimCache(store), **KW)
+    assert warm.cache_stats["hits"] == len(warm.rows)
+    assert warm.cache_stats["disk_hits"] > 0
+    assert _row_dicts(warm) == _row_dicts(cold)
+
+
+def test_cache_stats_are_per_sweep_deltas():
+    cache = SimCache()
+    run_sweep(cache=cache, **KW)
+    warm = run_sweep(cache=cache, **KW)
+    # the second SweepResult reports ONLY its own hits, not cumulative
+    assert warm.cache_stats["misses"] == 0
+    assert warm.cache_stats["stores"] == 0
+    assert warm.cache_stats["hits"] == len(warm.rows)
+
+
+def test_partial_energy_folds_resimulate_and_union():
+    ems = list(registry.ENERGY_CONFIGS.values())
+    cache = SimCache()
+    run_sweep(cache=cache, energy_models=ems[:1], **KW)
+    # asking for MORE folds than cached must re-simulate (the trace is
+    # not stored), then the union serves both subsets
+    both = run_sweep(cache=cache, energy_models=ems[:2], **KW)
+    assert both.cache_stats["hits"] == 0
+    again = run_sweep(cache=cache, energy_models=ems[:2], **KW)
+    assert again.cache_stats["hits"] * 2 == len(again.rows)
+    first = run_sweep(cache=cache, energy_models=ems[:1], **KW)
+    assert first.cache_stats["hits"] == len(first.rows)
+
+
+# ------------------------------------------------------- parallel executor
+
+def test_workers_rows_byte_identical_to_serial():
+    serial = run_sweep(**KW)
+    parallel = run_sweep(workers=2, **KW)
+    assert (json.dumps(_row_dicts(parallel), sort_keys=True)
+            == json.dumps(_row_dicts(serial), sort_keys=True))
+    assert parallel.skipped == serial.skipped
+
+
+def test_workers_with_disk_cache_merge_stats(tmp_path):
+    store = str(tmp_path / "simcache")
+    cold = run_sweep(workers=2, cache=store, **KW)
+    assert cold.cache_stats["misses"] == len(cold.rows)
+    assert cold.cache_stats["stores"] == len(cold.rows)
+    # serial warm run over the workers' store: everything from disk
+    warm = run_sweep(cache=SimCache(store), **KW)
+    assert warm.cache_stats["hits"] == len(warm.rows)
+    assert _row_dicts(warm) == _row_dicts(cold)
+
+
+def test_workers_progress_called_in_serial_order():
+    seen_serial, seen_parallel = [], []
+    run_sweep(progress=lambda r: seen_serial.append(r.hw), **KW)
+    run_sweep(workers=2, progress=lambda r: seen_parallel.append(r.hw),
+              **KW)
+    assert seen_parallel == seen_serial
+
+
+# ---------------------------------------------------------- plan interning
+
+def test_to_dict_interns_duplicate_plans():
+    ems = list(registry.ENERGY_CONFIGS.values())
+    res = run_sweep(energy_models=ems, **KW)
+    art = res.to_dict()
+    assert all("plan_json" not in rd for rd in art["rows"])
+    # one plan per simulated point, not per (point x energy table) row
+    assert len(art["plan_table"]) * len(ems) == len(art["rows"])
+    for rd, row in zip(art["rows"], res.rows):
+        assert resolve_plan_json(art, rd) == row.plan_json
+    json.dumps(art)                     # artifact stays serializable
+
+
+def test_to_dict_can_skip_interning():
+    res = run_sweep(**KW)
+    art = res.to_dict(intern_plans=False)
+    assert "plan_table" not in art
+    for rd, row in zip(art["rows"], res.rows):
+        assert rd["plan_json"] == row.plan_json
+        assert resolve_plan_json(art, rd) == row.plan_json
+
+
+# ------------------------------------------------- successive-halving search
+
+def test_sample_space_is_deterministic_and_keeps_presets():
+    a, _ = sample_space(5, seed=7)
+    b, _ = sample_space(5, seed=7)
+    assert [p.name for p in a] == [p.name for p in b]
+    assert len(a) == 5
+    # presets lead the draw regardless of seed
+    assert [p.name for p in a[:3]] == list(registry.HW_CONFIGS)
+    c, _ = sample_space(5, seed=8)
+    assert {p.name for p in c} != {p.name for p in a} or c == a
+
+
+def test_search_recovers_grid_frontier_with_half_the_sims():
+    grid = run_sweep(models=["whisper-base"], axes=GRID_AXES,
+                     seq_lens=(SEQ,), include_presets=False)
+    found = successive_halving(models=["whisper-base"], axes=GRID_AXES,
+                               seq_len=SEQ, include_presets=False)
+    want = sorted((r.hw, r.latency_cycles, r.energy_pj)
+                  for r in grid.pareto())
+    got = sorted((r.hw, r.latency_cycles, r.energy_pj)
+                 for r in found.sweep.pareto())
+    assert want == got
+    assert found.full_sims <= len(grid.rows) / 2
+    assert found.space_size == len(grid.rows)
+    # the ledger is replayable bookkeeping: rungs narrow monotonically
+    # and the final rung is full fidelity over the emitted survivors
+    sizes = [len(r.candidates) for r in found.rungs]
+    assert sizes == sorted(sizes, reverse=True)
+    assert not found.rungs[-1].proxy
+    assert sorted(found.rungs[-1].survivors) == sorted(
+        {r.hw for r in found.sweep.rows})
+
+
+def test_search_rows_match_grid_rows_exactly():
+    # a surviving point's full-fidelity row == the grid's row for that
+    # point, stamps and plan JSON included
+    grid = run_sweep(models=["whisper-base"], axes=GRID_AXES,
+                     seq_lens=(SEQ,), include_presets=False)
+    found = successive_halving(models=["whisper-base"], axes=GRID_AXES,
+                               seq_len=SEQ, include_presets=False)
+    by_hw = {r.hw: r.to_dict() for r in grid.rows}
+    for row in found.sweep.rows:
+        assert row.to_dict() == by_hw[row.hw]
+        assert row.bottleneck
+        assert row.headroom
+
+
+def test_search_artifact_carries_rung_ledger():
+    found = successive_halving(models=["whisper-base"], axes=GRID_AXES,
+                               seq_len=SEQ, include_presets=False,
+                               cache=SimCache())
+    art = found.to_dict()
+    meta = art["search"]
+    assert meta["space_size"] == 12
+    assert meta["num_rungs"] == len(meta["rungs"]) == len(found.rungs)
+    assert meta["full_sims"] == found.full_sims
+    for rec in meta["rungs"]:
+        assert set(rec["survivors"]) <= set(rec["candidates"])
+    json.dumps(art)
+
+    # proxy rung records must never satisfy a full-fidelity lookup: a
+    # fresh search over a cache warmed ONLY with proxies still
+    # simulates the final rung (hits there would mean namespace bleed)
+    cache = SimCache()
+    successive_halving(models=["whisper-base"], axes=GRID_AXES,
+                       seq_len=SEQ, include_presets=False, cache=cache)
+    again = successive_halving(models=["whisper-base"], axes=GRID_AXES,
+                               seq_len=SEQ, include_presets=False,
+                               cache=cache)
+    # the repeat search is all hits (both namespaces warmed)
+    assert again.sweep.cache_stats["hits"] == len(again.sweep.rows)
+
+
+def test_search_rejects_bad_eta():
+    with pytest.raises(ValueError, match="eta"):
+        successive_halving(models=["whisper-base"], eta=1)

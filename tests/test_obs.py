@@ -426,7 +426,7 @@ def test_run_metadata_schema_version():
     sys.path.insert(0, ".")                    # repo root for benchmarks/
     from benchmarks import common
     meta = common.run_metadata()
-    assert meta["schema_version"] == common.REPORT_SCHEMA_VERSION == 3
+    assert meta["schema_version"] == common.REPORT_SCHEMA_VERSION == 4
     assert meta["python"] and meta["jax"]
     assert isinstance(meta["git"], str) and meta["git"]
 
